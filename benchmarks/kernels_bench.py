@@ -1,0 +1,48 @@
+"""Microbenchmarks for the Pallas kernel wrappers (interpret mode on CPU —
+numbers are correctness-path timings, not TPU performance; TPU perf is
+modelled in the roofline table instead)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernel_parity_ops():
+    from repro.kernels import ops
+    k = 4
+    q = jnp.ones((k, 8, 4096))
+    c = jnp.arange(1.0, k + 1.0)
+    us = _time(lambda x: ops.parity_encode_op(x, c), q)
+    print(f"kernel_parity_encode_us,{us:.0f},interpret_mode")
+    outs = jnp.ones((k, 8, 1000))
+    us = _time(lambda o: ops.parity_decode_op(o[0], o, 1), outs)
+    print(f"kernel_parity_decode_us,{us:.0f},interpret_mode")
+
+
+def bench_kernel_attention():
+    from repro.kernels import ops
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    us = _time(lambda a, b, c: ops.flash_attention_op(a, b, c), q, k, v,
+               iters=3)
+    print(f"kernel_flash_attention_us,{us:.0f},interpret_mode")
+    qd = jax.random.normal(ks[0], (B, H, hd))
+    us = _time(lambda a, b, c: ops.decode_attention_op(a, b, c, 200),
+               qd, k, v, iters=3)
+    print(f"kernel_decode_attention_us,{us:.0f},interpret_mode")
+
+
+ALL = [bench_kernel_parity_ops, bench_kernel_attention]

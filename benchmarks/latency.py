@@ -1,0 +1,122 @@
+"""Tail-latency benchmarks — paper §5 (Figs 11-15) via the discrete-event
+simulator, plus §5.2.5 encoder/decoder microbenchmarks on real arrays."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.simulator import SimConfig, simulate
+
+NQ = 100_000
+
+
+def _row(tag, r, extra=""):
+    gap = r["p999_ms"] - r["median_ms"]
+    print(f"{tag}_median_ms,{r['median_ms']:.2f},{extra}")
+    print(f"{tag}_p99.9_ms,{r['p999_ms']:.2f},gap={gap:.2f}")
+
+
+def bench_fig11_latency_vs_qps():
+    """GPU cluster (m=12, 25 ms service) and CPU cluster (m=24, 12 ms)."""
+    for cluster, m, svc, rates in [("gpu", 12, 25.0, (200, 270, 330)),
+                                   ("cpu", 24, 12.0, (400, 540, 660))]:
+        for qps in rates:
+            cfg = SimConfig(n_queries=NQ, qps=qps, m=m, k=2, seed=1,
+                            service_ms=svc)
+            parm = simulate(cfg, "parm")
+            er = simulate(cfg, "equal_resources")
+            _row(f"fig11_{cluster}_q{qps}_parm", parm)
+            _row(f"fig11_{cluster}_q{qps}_eqres", er)
+            red = 1 - parm["p999_ms"] / er["p999_ms"]
+            gapx = (er["p999_ms"] - er["median_ms"]) / max(
+                parm["p999_ms"] - parm["median_ms"], 1e-9)
+            print(f"fig11_{cluster}_q{qps}_p999_reduction,{red:.2%},"
+                  f"gap_closer_x={gapx:.2f}")
+
+
+def bench_fig12_vary_k():
+    for k in (2, 3, 4):
+        cfg = SimConfig(n_queries=NQ, qps=270, m=12, k=k, seed=1)
+        parm = simulate(cfg, "parm")
+        _row(f"fig12_k{k}_parm", parm, extra=f"redundancy={1/k:.0%}")
+    er = simulate(SimConfig(n_queries=NQ, qps=270, m=12, k=2, seed=1),
+                  "equal_resources")
+    _row("fig12_eqres33pct", er)
+
+
+def bench_fig13_network_imbalance():
+    for ns in (2, 3, 4, 5):
+        cfg = SimConfig(n_queries=NQ, qps=270, m=12, k=2, seed=1,
+                        n_shuffles=ns)
+        parm = simulate(cfg, "parm")
+        er = simulate(cfg, "equal_resources")
+        gapx = (er["p999_ms"] - er["median_ms"]) / max(
+            parm["p999_ms"] - parm["median_ms"], 1e-9)
+        print(f"fig13_shuffles{ns}_gap_closer_x,{gapx:.2f},"
+              f"parm_p999={parm['p999_ms']:.1f} er_p999={er['p999_ms']:.1f}")
+
+
+def bench_fig14_light_multitenancy():
+    """No network imbalance; light background inference load instead."""
+    for qps in (200, 240, 270):
+        cfg = SimConfig(n_queries=NQ, qps=qps, m=12, k=2, seed=1,
+                        n_shuffles=2, shuffle_delay_ms=(5.0, 15.0))
+        parm = simulate(cfg, "parm")
+        er = simulate(cfg, "equal_resources")
+        gapx = (er["p999_ms"] - er["median_ms"]) / max(
+            parm["p999_ms"] - parm["median_ms"], 1e-9)
+        print(f"fig14_q{qps}_gap_closer_x,{gapx:.2f},light_load")
+
+
+def bench_fig15_approx_backup():
+    """Approximate-backup baseline destabilises as qps grows (§5.2.6)."""
+    for qps in (200, 270, 300, 330):
+        cfg = SimConfig(n_queries=NQ, qps=qps, m=12, k=2, seed=1)
+        parm = simulate(cfg, "parm")
+        ab = simulate(cfg, "approx_backup")
+        print(f"fig15_q{qps}_parm_p999,{parm['p999_ms']:.1f},")
+        print(f"fig15_q{qps}_approx_backup_p999,{ab['p999_ms']:.1f},"
+              f"speedup=1.15x_insufficient")
+
+
+def bench_sec525_encode_decode_latency():
+    """Encoder/decoder wall time on this container (paper: 93-193 us encode,
+    8-19 us decode on a c5.9xlarge frontend)."""
+    from repro.core.codes import LinearDecoder, SumEncoder
+    for k in (2, 3, 4):
+        enc, dec = SumEncoder(k, 1), LinearDecoder(k, 1)
+        # Cat-v-Dog-scale query: 224x224x3 image
+        q = jnp.ones((k, 1, 224, 224, 3))
+        outs = jnp.ones((k, 1, 1000))                 # 1000-class predictions
+        e = jax.jit(lambda x: enc(x))
+        d = jax.jit(lambda p, o: dec.decode_one(p, o, 0))
+        e(q).block_until_ready()
+        d(outs[0], outs).block_until_ready()
+        for name, fn, args, iters in [("encode", e, (q,), 100),
+                                      ("decode", d, (outs[0], outs), 200)]:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn(*args).block_until_ready()
+            us = (time.perf_counter() - t0) / iters * 1e6
+            print(f"sec525_{name}_k{k}_us,{us:.0f},"
+                  f"paper_{name}~{'93-193' if name == 'encode' else '8-19'}us")
+
+
+def bench_batching():
+    """§5.2.3: ParM holds its advantage at batch sizes 2 and 4."""
+    for b, qps in [(1, 300), (2, 460), (4, 584)]:
+        cfg = SimConfig(n_queries=NQ // 2, qps=qps / b, m=12, k=2, seed=1,
+                        batch_size=b)
+        parm = simulate(cfg, "parm")
+        er = simulate(cfg, "equal_resources")
+        red = 1 - parm["p999_ms"] / er["p999_ms"]
+        print(f"fig_batch{b}_p999_reduction,{red:.2%},qps={qps}")
+
+
+ALL = [bench_fig11_latency_vs_qps, bench_fig12_vary_k,
+       bench_fig13_network_imbalance, bench_fig14_light_multitenancy,
+       bench_fig15_approx_backup, bench_sec525_encode_decode_latency,
+       bench_batching]

@@ -1,0 +1,69 @@
+"""Roofline table (deliverable g): reads the dry-run JSON artifacts and
+prints per-(arch x shape x mesh) roofline terms. Source of EXPERIMENTS.md
+§Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def rows(mesh="pod", dryrun_dir=None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir or DRYRUN_DIR,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def bench_roofline_table():
+    rs = rows("pod")
+    if not rs:
+        print("roofline_table,SKIPPED,run repro.launch.dryrun --all first")
+        return
+    print("# arch,shape,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flops_ratio,temp_GiB_per_chip")
+    for r in rs:
+        ro = r["roofline"]
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{ro['compute_s']*1e3:.3f},"
+              f"mem={ro['memory_s']*1e3:.3f}ms "
+              f"coll={ro['collective_s']*1e3:.3f}ms "
+              f"dom={ro['dominant']} "
+              f"useful={r['useful_flops_ratio']:.3f} "
+              f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB")
+
+
+def bench_roofline_table_optimized():
+    d = os.path.join(os.path.dirname(__file__), "..",
+                     "experiments", "dryrun_opt")
+    rs = rows("pod", d)
+    if not rs:
+        print("roofline_opt,SKIPPED,run dryrun --all --out "
+              "experiments/dryrun_opt")
+        return
+    for r in rs:
+        ro = r["roofline"]
+        print(f"roofline_opt_{r['arch']}_{r['shape']},"
+              f"{ro['compute_s']*1e3:.3f},"
+              f"mem={ro['memory_s']*1e3:.3f}ms "
+              f"coll={ro['collective_s']*1e3:.3f}ms "
+              f"dom={ro['dominant']} "
+              f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB")
+
+
+def bench_multipod_check():
+    for tag, d in [("baseline", None),
+                   ("optimized", os.path.join(os.path.dirname(__file__),
+                                              "..", "experiments",
+                                              "dryrun_opt"))]:
+        rs = rows("multipod", d)
+        print(f"multipod_pairs_compiled_{tag},{len(rs)},of_40")
+
+
+ALL = [bench_roofline_table, bench_roofline_table_optimized,
+       bench_multipod_check]

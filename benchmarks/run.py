@@ -1,0 +1,49 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only latency
+Prints ``name,value,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "accuracy", "latency", "roofline",
+                             "kernels"])
+    args = ap.parse_args()
+
+    from benchmarks import accuracy, kernels_bench, latency, roofline_table
+    suites = {"accuracy": accuracy.ALL, "latency": latency.ALL,
+              "roofline": roofline_table.ALL,
+              "kernels": kernels_bench.ALL}
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    failures = []
+    t0 = time.time()
+    for suite, fns in suites.items():
+        for fn in fns:
+            print(f"# --- {suite}:{fn.__name__} ---", flush=True)
+            t1 = time.time()
+            try:
+                fn()
+            except Exception as e:
+                failures.append((fn.__name__, repr(e)))
+                traceback.print_exc()
+            print(f"# {fn.__name__} took {time.time()-t1:.1f}s", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

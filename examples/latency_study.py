@@ -1,0 +1,34 @@
+"""Tail-latency study (paper Fig 11) via the discrete-event simulator.
+
+    PYTHONPATH=src python examples/latency_study.py [--qps 270] [--m 12]
+"""
+import argparse
+
+from repro.serving.simulator import SimConfig, simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--qps", type=float, default=270)
+    ap.add_argument("--m", type=int, default=12)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--n", type=int, default=100_000)
+    args = ap.parse_args()
+
+    cfg = SimConfig(n_queries=args.n, qps=args.qps, m=args.m, k=args.k)
+    print(f"m={args.m} deployed instances, k={args.k} "
+          f"({1/args.k:.0%} redundancy), {args.qps} qps, "
+          f"{args.n} queries, background network shuffles on\n")
+    print(f"{'strategy':18s} {'median':>8s} {'p99':>8s} {'p99.9':>8s} "
+          f"{'gap':>8s} {'recon':>7s}")
+    for strat in ("none", "equal_resources", "parm", "approx_backup",
+                  "replication"):
+        r = simulate(cfg, strat)
+        gap = r["p999_ms"] - r["median_ms"]
+        print(f"{strat:18s} {r['median_ms']:7.1f}ms {r['p99_ms']:7.1f}ms "
+              f"{r['p999_ms']:7.1f}ms {gap:7.1f}ms "
+              f"{r['reconstructions']:7d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end ParM serving driver (the paper-kind end-to-end example:
+serve a small model with batched requests through the coded frontend).
+
+    PYTHONPATH=src python examples/serve_parm.py [--n 120] [--k 2] [--m 4]
+
+Trains a deployed classifier + parity model, then serves a request stream
+through the threaded frontend with an injected straggler instance, and
+reports latency percentiles + how each prediction was completed
+(model / parity-reconstruction), plus accuracy of each path.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.parity import train_parity_models
+from repro.data.pipeline import batched, cluster_images
+from repro.models.cnn import build
+from repro.serving.runtime import ParMFrontend
+from repro.training.loss import softmax_xent
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+IMG = (16, 16, 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=120)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--straggle-ms", type=float, default=150.0)
+    args = ap.parse_args()
+
+    # train deployed + parity models ---------------------------------------
+    x, y, tmpl = cluster_images(3000, noise=2.0, seed=0, image_shape=IMG)
+    xt, yt, _ = cluster_images(args.n, noise=2.0, seed=1, templates=tmpl,
+                               image_shape=IMG)
+    params, fwd = build("mlp", jax.random.PRNGKey(0), image_shape=IMG)
+    opt = AdamConfig(lr=1e-3)
+    state = adam_init(params, opt)
+
+    @jax.jit
+    def step(p, s, xb, yb):
+        loss, g = jax.value_and_grad(
+            lambda p: softmax_xent(fwd(p, xb), yb))(p)
+        return (*adam_update(g, s, p, opt), loss)
+
+    for xb, yb in batched(x, y, 64, epochs=3):
+        params, state, _ = step(params, state, xb, yb)
+    pp, enc, dec = train_parity_models(
+        params, fwd, lambda kk: build("mlp", kk, image_shape=IMG)[0],
+        x, k=args.k, epochs=5)
+    jfwd = jax.jit(fwd)
+
+    # serve with an injected straggler --------------------------------------
+    slow = {0}
+
+    def delay(iid):
+        return args.straggle_ms / 1e3 if iid in slow else 0.0
+
+    fe = ParMFrontend(jfwd, params, parity_params=pp[0], k=args.k, m=args.m,
+                      mode="parm", delay_fn=delay)
+    try:
+        t0 = time.perf_counter()
+        qs = []
+        for i in range(args.n):
+            qs.append(fe.submit(i, xt[i:i + 1]))
+            time.sleep(0.008)                  # ~125 qps arrival stream
+        ok = fe.wait_all(timeout=120)
+        wall = time.perf_counter() - t0
+        assert ok, "unanswered queries!"
+        stats = fe.stats()
+        lat = np.array([q.latency_ms for q in qs])
+        print(f"\nserved {args.n} queries in {wall:.2f}s "
+              f"(m={args.m} deployed + {max(1, args.m // args.k)} parity, "
+              f"instance 0 straggles {args.straggle_ms:.0f} ms)")
+        print(f"latency  p50={np.percentile(lat, 50):.1f}ms "
+              f"p90={np.percentile(lat, 90):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms max={lat.max():.1f}ms")
+        print(f"completed_by: {stats['completed_by']}")
+        for how in ("model", "parity"):
+            sel = [q for q in qs if q.completed_by == how]
+            if sel:
+                acc = np.mean([np.argmax(q.result) == yt[q.qid]
+                               for q in sel])
+                print(f"accuracy of '{how}' predictions: {acc:.3f} "
+                      f"(n={len(sel)})")
+    finally:
+        fe.shutdown()
+
+
+if __name__ == "__main__":
+    main()

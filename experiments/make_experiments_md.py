@@ -1,0 +1,128 @@
+"""Assemble EXPERIMENTS.md from dry-run JSON artifacts + bench outputs.
+
+    PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(d, mesh=None):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, d, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r["mesh"] != mesh:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(rows, base=None):
+    hdr = ("| arch | shape | kind | compute ms | memory ms | coll ms | "
+           "dominant | useful | temp GiB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for (arch, shape), r in sorted(rows.items()):
+        c = r["roofline_scan_corrected"]
+        u = r["useful_flops_ratio"]
+        t = r["memory"]["temp_bytes"] / 2 ** 30
+        extra = ""
+        if base and (arch, shape) in base:
+            t0 = base[(arch, shape)]["memory"]["temp_bytes"] / 2 ** 30
+            extra = f" ({t0:.1f}→)"
+        lines.append(
+            f"| {arch} | {shape} | {r['kind']} | {c['compute_s']*1e3:.1f} | "
+            f"{c['memory_s']*1e3:.1f} | {c['collective_s']*1e3:.1f} | "
+            f"{r['roofline']['dominant']} | {u:.2f} |{extra} {t:.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    base = load("experiments/dryrun", "pod")
+    multi = load("experiments/dryrun", "multipod")
+    opt = load("experiments/dryrun_opt", "pod")
+    opt_mp = load("experiments/dryrun_opt", "multipod")
+
+    parts = []
+    parts.append(open(os.path.join(ROOT, "experiments",
+                                   "EXPERIMENTS_header.md")).read())
+
+    parts.append("\n## §Dry-run\n")
+    parts.append(f"""
+Every (architecture × input-shape) pair was lowered **and compiled** with
+`jax.jit(...).lower(...).compile()` on two production meshes, with
+`memory_analysis()` and `cost_analysis()` captured per pair
+(`experiments/dryrun/*.json`):
+
+- single pod `(data=16, model=16)` = 256 chips: **{len(base)}/40 pairs compile**
+- multi-pod `(pod=2, data=16, model=16)` = 512 chips: **{len(multi)}/40 pairs
+  compile** (batch shards over `pod×data`; the pod axis carries only
+  data-parallel reductions)
+
+Methodology notes (verified empirically, see DESIGN.md):
+- `cost_analysis()` of the SPMD executable is **per device**, and counts
+  `while`-loop bodies **once**. Tables below scale flops/bytes/collectives by
+  the layer-stack scan trip count (`scan_trips` in the JSON). These corrected
+  terms are approximations in both directions: inner scans (flash KV blocks,
+  SSD chunks) are still single-counted (under-count), while loop-invariant
+  carried buffers (e.g. the whole decode cache threaded through the layer
+  scan) get multiplied (over-count). Raw per-body terms are kept in the JSON;
+  **peak-memory numbers are exact** and anchor all §Perf claims.
+- collective bytes = sum of result-buffer sizes of
+  all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute in the
+  compiled per-device HLO.
+- `long_500k` runs natively for ssm/hybrid archs and with the
+  sliding-window(8192) variant for full-attention archs (noted per JSON).
+""")
+
+    parts.append("\n## §Roofline — paper-faithful baseline "
+                 "(single pod, 256 chips)\n\n")
+    parts.append(
+        "Terms in ms per step (scan-corrected); constants: 197 TFLOP/s bf16,"
+        " 819 GB/s HBM, 50 GB/s/link. `useful` = MODEL_FLOPS (6·N_active·D,"
+        " ×3 for training) / corrected HLO flops.\n\n")
+    parts.append(table(base))
+
+    parts.append("\n### Baseline observations (what would move each "
+                 "dominant term)\n")
+    parts.append("""
+- **train_4k** pairs are memory-dominated: remat recompute traffic + fp32
+  loss/optimizer temporaries; lever = microbatching (§Perf B) and bf16 grad
+  accumulation.
+- **decode** pairs were collective-dominated *entirely* due to the GQA KV
+  cache replication over the 16-way tensor axis (kv_heads < 16); lever =
+  sequence-sharded caches + grouped-GQA einsums (§Perf A).
+- **prefill** pairs split between memory (activation streaming) and
+  collective (FSDP weight gathers — pointless for inference; §Perf C).
+- MoE archs keep small collective terms after the explicit expert-parallel
+  shard_map schedule (the global-scatter lowering was catastrophically
+  replicated — §Perf iteration 1 under *history*).
+- `useful` ≫1 or ≪1 flags where inner-scan undercounting (flash/SSD) or
+  non-matmul overheads (dispatch gathers, optimizer elementwise) dominate —
+  per-pair notes in the JSONs.
+""")
+
+    if opt:
+        parts.append("\n## §Roofline — beyond-paper optimized layout "
+                     "(same mesh)\n\n")
+        parts.append(
+            "After §Perf changes (grouped-GQA, seq-sharded caches, inference"
+            " weight layout; microbatching is opt-in per run so train rows"
+            " here are un-microbatched). temp column shows (baseline→)"
+            " optimized GiB/chip. The same optimized code also compiles for"
+            f" all {len(opt_mp)}/40 pairs on the 512-chip multi-pod mesh"
+            " (`experiments/dryrun_opt/*multipod*`).\n\n")
+        parts.append(table(opt, base))
+
+    parts.append(open(os.path.join(ROOT, "experiments",
+                                   "EXPERIMENTS_perf.md")).read())
+
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(p.rstrip("\n") + "\n" for p in parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Checkpointing: pytree <-> .npz with structure-preserving key paths."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(params):
+    leaves, treedef = jax.tree.flatten(params)
+    return leaves, treedef
+
+
+def save(path, params, step=None, extra=None):
+    leaves, treedef = _flatten(params)
+    arrs, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind not in "fiub":         # ml_dtypes (bf16, fp8, ...)
+            a = a.astype(np.float32)
+        arrs[f"leaf_{i}"] = a
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves),
+            "dtypes": dtypes, "step": step, "extra": extra or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=json.dumps(meta), **arrs)
+
+
+def load(path, like):
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    import jax.numpy as jnp
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        leaves = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+    like_leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(like_leaves), "leaf count mismatch"
+    out = []
+    for got, want in zip(leaves, like_leaves):
+        assert got.shape == want.shape, (got.shape, want.shape)
+        wdt = jnp.asarray(want).dtype if not hasattr(want, "dtype") \
+            else want.dtype
+        out.append(np.asarray(jnp.asarray(got).astype(wdt)))
+    return jax.tree.unflatten(treedef, out), meta

@@ -1,0 +1,147 @@
+"""Erasure-coding layer of ParM: encoders and decoders (paper §3.2, §3.5).
+
+ParM deliberately keeps these *simple and fast* — the learning happens in the
+parity model, not the code. We provide:
+
+* ``SumEncoder``      — the paper's generic addition encoder, generalised to
+                        r >= 1 parities with Vandermonde coefficient rows
+                        (r=1, row [1, 1, ..., 1] reduces to P = sum X_i; §3.5's
+                        k=2,r=2 example is rows [1,1] and [1,2]).
+* ``LinearDecoder``   — the subtraction decoder for r=1 and, in general, the
+                        small linear solve that reconstructs up to r missing
+                        outputs from any k available (model ∪ parity) outputs.
+* ``ConcatEncoder``   — the task-specific image encoder of §4.2.3: downsample
+                        each of the k image queries and place them in a grid,
+                        keeping the parity query the same size as one query.
+
+All are pure jnp (µs-scale); the hot paths also exist as Pallas TPU kernels in
+``repro.kernels`` (parity_encode / parity_decode) validated against these.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def vandermonde(k: int, r: int) -> np.ndarray:
+    """Coefficient matrix C [r, k]: C[j, i] = (i+1)**j.
+
+    Any r columns... more precisely any square submatrix formed by the rows of
+    [I_k; C] that can arise from <= r unavailabilities is invertible, which is
+    what the decoder needs (MDS property of Vandermonde systems over the
+    reals)."""
+    return np.vander(np.arange(1, k + 1, dtype=np.float64), r,
+                     increasing=True).T.copy()
+
+
+@dataclass(frozen=True)
+class SumEncoder:
+    """P_j = sum_i C[j,i] * X_i over feature-aligned queries."""
+    k: int
+    r: int = 1
+
+    @property
+    def coeffs(self):
+        return jnp.asarray(vandermonde(self.k, self.r), jnp.float32)
+
+    def __call__(self, queries):
+        """queries [k, ...] -> parities [r, ...]."""
+        assert queries.shape[0] == self.k, queries.shape
+        c = self.coeffs.astype(queries.dtype)
+        return jnp.tensordot(c, queries, axes=1)
+
+
+@dataclass(frozen=True)
+class ConcatEncoder:
+    """§4.2.3: downsample k images into a g x g grid (g = ceil(sqrt(k))).
+
+    Output spatial size equals one input query, so parity-model input shape
+    (and hence network bandwidth overhead, 1/k) is unchanged. r must be 1.
+    """
+    k: int
+    r: int = 1
+
+    def __call__(self, queries):
+        """queries [k, B, H, W, C] -> [1, B, H, W, C]."""
+        assert self.r == 1
+        k, B, H, W, C = queries.shape
+        g = math.ceil(math.sqrt(k))
+        h, w = H // g, W // g
+        # average-pool each query down to (h, w)
+        q = queries.reshape(k * B, g, h, g, w, C).mean(axis=(1, 3))
+        q = q.reshape(k, B, h, w, C)
+        canvas = jnp.zeros((B, H, W, C), queries.dtype)
+        for i in range(k):
+            rr, cc = divmod(i, g)
+            canvas = canvas.at[:, rr * h:(rr + 1) * h,
+                               cc * w:(cc + 1) * w, :].set(q[i])
+        return canvas[None]
+
+
+@dataclass(frozen=True)
+class LinearDecoder:
+    """Reconstructs missing deployed-model outputs from available model and
+    parity-model outputs.
+
+    r = 1 fast path is the paper's subtraction decoder:
+        F_hat(X_j) = F_P(P) - sum_{i != j} F(X_i)
+    General path solves  C[:, miss] @ Y_miss = parity_out - C[:, avail] @ Y_avail
+    (least squares; exact when #missing <= #available parities).
+    """
+    k: int
+    r: int = 1
+
+    @property
+    def coeffs(self):
+        return jnp.asarray(vandermonde(self.k, self.r), jnp.float32)
+
+    def decode_one(self, parity_out, outputs, missing_idx):
+        """r=1 subtraction path. outputs [k, ...] with the missing row
+        arbitrary; parity_out [...]. Returns reconstruction of that row."""
+        c = self.coeffs[0].astype(jnp.float32)          # [k]
+        outs = outputs.astype(jnp.float32)
+        mask = (jnp.arange(self.k) != missing_idx)
+        avail_sum = jnp.einsum("k,k...->...", c * mask, outs)
+        return (parity_out.astype(jnp.float32) - avail_sum) / c[missing_idx]
+
+    def decode(self, parity_outs, outputs, missing_mask, parity_avail=None):
+        """General decode. parity_outs [r, ...]; outputs [k, ...] (garbage in
+        missing rows); missing_mask [k] bool; ``parity_avail`` [r] bool marks
+        which parity outputs arrived (a parity model can be a straggler too —
+        decode is exact whenever #available parities >= #missing). Returns
+        outputs with missing rows replaced by reconstructions.
+
+        Uses a masked least-squares solve so the whole thing jits with a
+        static shape regardless of *which* rows are missing."""
+        C = self.coeffs                                  # [r, k]
+        if parity_avail is not None:
+            pa = jnp.asarray(parity_avail).astype(jnp.float32)[:, None]
+            C = C * pa
+            parity_outs = parity_outs * pa.reshape(
+                (-1,) + (1,) * (parity_outs.ndim - 1))
+        outs = outputs.astype(jnp.float32)
+        avail = (~missing_mask).astype(jnp.float32)
+        rhs = parity_outs.astype(jnp.float32) - jnp.einsum(
+            "rk,k...->r...", C * avail[None, :], outs)   # [r, ...]
+        # Solve C_miss @ y = rhs for the missing columns via normal equations
+        # restricted to missing columns: M = C * miss
+        M = C * missing_mask.astype(jnp.float32)[None, :]        # [r, k]
+        G = M.T @ M + 1e-9 * jnp.eye(self.k)                     # [k, k]
+        # y_missing = pinv: solve G y = M^T rhs
+        mt_rhs = jnp.einsum("rk,r...->k...", M, rhs)
+        flat = mt_rhs.reshape(self.k, -1)
+        sol = jnp.linalg.solve(G, flat).reshape(mt_rhs.shape)    # [k, ...]
+        mm = missing_mask.reshape((self.k,) + (1,) * (outs.ndim - 1))
+        return jnp.where(mm, sol, outs)
+
+
+def make_code(k, r=1, kind="sum"):
+    if kind == "sum":
+        return SumEncoder(k, r), LinearDecoder(k, r)
+    if kind == "concat":
+        return ConcatEncoder(k, r), LinearDecoder(k, 1)
+    raise ValueError(kind)

@@ -1,0 +1,111 @@
+"""Parity models (paper §3.3): construction, training-data generation and the
+distillation training loop.
+
+A parity model F_P shares the deployed model's architecture (same average
+runtime => parity instances keep pace at 1/k the query rate, §5.2.6) but is
+trained on parity queries with targets that are the code's linear combination
+of deployed-model outputs:
+
+    F_P( E(X_1..X_k) )  ~=  sum_i C[j,i] * F(X_i)      (one model per parity j)
+
+Training data is generated from the deployed model's own training set when
+available, else from live queries (§3.3); labels come from deployed-model
+inference (distillation) or, when labelled data exists, from summed one-hot
+labels — both modes are supported below.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codes import SumEncoder, ConcatEncoder, LinearDecoder
+from repro.training.loss import parity_mse
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+
+def group_queries(x, k, rng):
+    """Randomly group n samples into floor(n/k) coding groups: [G, k, ...]."""
+    n = (len(x) // k) * k
+    order = rng.permutation(len(x))[:n]
+    return x[order].reshape(len(x) // k, k, *x.shape[1:]), order[:n]
+
+
+def make_parity_dataset(x, fx, k, encoder, coeff_row, rng):
+    """Returns (parity queries [G, ...], targets [G, ...]).
+
+    x: queries [n, ...]; fx: deployed outputs F(x) [n, V]."""
+    groups, order = group_queries(x, k, rng)
+    fx_groups = fx[order].reshape(groups.shape[0], k, *fx.shape[1:])
+    # encoder consumes [k, B, ...]
+    parities = encoder(np.moveaxis(groups, 1, 0))[  # [r, G, ...] -> row 0
+        0] if isinstance(encoder, ConcatEncoder) else None
+    if parities is None:
+        c = np.asarray(coeff_row, np.float32)
+        parities = np.einsum("k,gk...->g...", c, groups)
+    targets = np.einsum("k,gk...->g...", np.asarray(coeff_row, np.float32),
+                        fx_groups)
+    return np.asarray(parities, np.float32), np.asarray(targets, np.float32)
+
+
+@dataclass
+class ParityTrainer:
+    """Trains one parity model with MSE distillation (Adam, paper §4.1
+    hyperparameters: lr=1e-3, L2=1e-5, minibatch 32-64)."""
+    fwd: callable                   # fwd(params, x) -> outputs
+    opt: AdamConfig = AdamConfig(lr=1e-3, weight_decay=1e-5)
+
+    def train(self, params, parities, targets, batch=64, epochs=5, seed=0,
+              log_every=0):
+        opt_state = adam_init(params, self.opt)
+
+        @jax.jit
+        def step(params, opt_state, xb, yb):
+            def loss_fn(p):
+                return parity_mse(self.fwd(p, xb), yb)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = adam_update(grads, opt_state, params,
+                                            self.opt)
+            return params, opt_state, loss
+
+        rng = np.random.default_rng(seed)
+        losses = []
+        n = len(parities)
+        for ep in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch + 1, batch):
+                sel = order[i:i + batch]
+                params, opt_state, loss = step(params, opt_state,
+                                               parities[sel], targets[sel])
+                losses.append(float(loss))
+            if log_every:
+                print(f"  parity epoch {ep}: loss={losses[-1]:.5f}")
+        return params, losses
+
+
+def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=1,
+                        encoder_kind="sum", epochs=5, seed=0, batch=64,
+                        use_true_labels=False, labels=None, n_classes=None):
+    """End-to-end §3.3 pipeline. Returns (list of r parity params, encoder,
+    decoder)."""
+    from repro.core.codes import make_code, vandermonde
+    encoder, decoder = make_code(k, r, encoder_kind)
+    fx = np.asarray(jax.jit(fwd)(deployed_params, jnp.asarray(x_train)))
+    if use_true_labels:
+        fx = np.eye(n_classes, dtype=np.float32)[labels] * 10.0  # scaled one-hot
+    C = vandermonde(k, r)
+    rng = np.random.default_rng(seed)
+    parity_params = []
+    for j in range(r):
+        pq, tg = make_parity_dataset(np.asarray(x_train), fx, k, encoder,
+                                     C[j], rng)
+        key = jax.random.PRNGKey(seed + 17 * j)
+        pp = init_fn(key)
+        trainer = ParityTrainer(fwd=fwd)
+        pp, _ = trainer.train(pp, pq, tg, batch=batch, epochs=epochs,
+                              seed=seed + j)
+        parity_params.append(pp)
+    return parity_params, encoder, decoder

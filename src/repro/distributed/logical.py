@@ -1,0 +1,103 @@
+"""Logical activation-sharding rules (MaxText-style).
+
+XLA's SPMD propagation does not reliably push shardings into ``while``-loop
+carries (the flash-attention KV scan, the SSD chunk scan, the layer-stack
+scan) — without explicit constraints those loop temporaries compile
+*replicated*, which is exactly the 36 GiB/buffer blow-up found in the first
+train_4k dry-run (EXPERIMENTS.md §Perf iteration 0).
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("batch", None, "heads", None))``); the launcher binds
+logical names to mesh axes once per run. When no rules are active (CPU unit
+tests) constrain() is a no-op. A dim is only sharded when divisible by the
+mesh-axis size, and each mesh axis is used at most once per spec.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+DEFAULT_LOGICAL = {
+    "batch": ("data",),
+    "tokens": ("data",),          # flattened batch*seq
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "capacity": ("data",),
+    "ff": ("model",),
+    "d_inner": ("model",),
+    # cache sequence dim: takes whatever axes the batch dim left unused
+    # (decode_32k -> model; long_500k B=1 -> model+data)
+    "seq": ("model", "data"),
+    "embed": (),
+}
+
+
+def set_rules(rules, axis_sizes, mesh=None):
+    _STATE.rules = rules
+    _STATE.sizes = axis_sizes
+    _STATE.mesh = mesh
+
+
+def clear_rules():
+    _STATE.rules = None
+    _STATE.sizes = None
+    _STATE.mesh = None
+
+
+def state():
+    return (getattr(_STATE, "rules", None), getattr(_STATE, "sizes", None),
+            getattr(_STATE, "mesh", None))
+
+
+@contextmanager
+def logical_rules(rules, axis_sizes, mesh=None):
+    old = state()
+    set_rules(rules, axis_sizes, mesh)
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.sizes, _STATE.mesh = old
+
+
+def rules_for_mesh(mesh, multi_pod=None):
+    rules = dict(DEFAULT_LOGICAL)
+    if "pod" in mesh.axis_names:
+        rules["batch"] = ("pod", "data")
+        rules["tokens"] = ("pod", "data")
+    return rules, dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def constrain(x, axes):
+    """axes: tuple of logical names (or None) matching x.ndim."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return x
+    sizes = _STATE.sizes
+    used = set()
+    spec = []
+    for dim, name in zip(x.shape, axes):
+        entry = None
+        mesh_axes = rules.get(name, ()) if name else ()
+        chosen = []
+        prod = 1
+        for a in mesh_axes:
+            if a in used or a not in sizes or sizes[a] <= 1:
+                continue                       # axis taken elsewhere: skip it
+            if dim % (prod * sizes[a]) == 0:
+                prod *= sizes[a]
+                chosen.append(a)
+            else:
+                break                          # indivisible: stop extending
+        if chosen:
+            used.update(chosen)
+            entry = tuple(chosen) if len(chosen) > 1 else chosen[0]
+        spec.append(entry)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,189 @@
+"""Path-based sharding rules: FSDP x tensor x expert parallel.
+
+Mesh axes: ``model`` (tensor/expert parallel, 16-way per pod), ``data``
+(FSDP + batch, 16-way), optionally ``pod`` (2-way across pods; batch shards
+over ('pod','data')).
+
+Rules are name-driven over the param pytree paths and *divisibility-guarded*:
+a dim is sharded on an axis only if it divides evenly (e.g. qwen2's kv=2
+heads stay replicated on a 16-way model axis rather than forcing an uneven
+partition). Stacked superblock params carry a leading layer-group dim that is
+never sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, tree_unflatten, DictKey, SequenceKey
+
+
+def _path_str(path):
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class ShardingRules:
+    """``fsdp_params=False`` is the *inference* layout: weights replicate
+    over the data axis (tensor-parallel only), eliminating the per-layer
+    FSDP all-gathers that otherwise dominate serving collectives. Only legal
+    when params/tp_size fit HBM — the launcher decides per architecture."""
+
+    def __init__(self, mesh, batch_axes=None, fsdp_params=True):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.tp = "model" if "model" in self.axis_sizes else None
+        self.fsdp = ("data" if ("data" in self.axis_sizes and fsdp_params)
+                     else None)
+        self.fsdp_params = fsdp_params
+        if batch_axes is None:
+            batch_axes = tuple(a for a in ("pod", "data")
+                               if a in self.axis_sizes)
+        self.batch_axes = batch_axes
+
+    # ------------------------------------------------------------------
+    def _ok(self, dim_size, axis):
+        if axis is None:
+            return False
+        a = self.axis_sizes.get(axis, 1)
+        return dim_size % a == 0 and a > 1
+
+    def _axis(self, dim_size, axis):
+        return axis if self._ok(dim_size, axis) else None
+
+    def _batch_axis(self, dim_size):
+        """Largest prefix of batch_axes that divides dim_size."""
+        total = 1
+        chosen = []
+        for a in self.batch_axes:
+            total *= self.axis_sizes[a]
+            if dim_size % total == 0:
+                chosen.append(a)
+            else:
+                break
+        return tuple(chosen) if chosen else None
+
+    # ------------------------------------------------------------------
+    def param_spec(self, path, leaf):
+        """PartitionSpec for one parameter."""
+        name = _path_str(path)
+        shape = leaf.shape
+        stacked = name.startswith("blocks") or "/blocks/" in name
+        lead = (None,) if stacked else ()
+        core = shape[1:] if stacked else shape
+
+        def spec(*axes):
+            return P(*(lead + tuple(axes)))
+
+        last = name.rsplit("/", 1)[-1]
+        if last in ("scale", "q_norm", "k_norm", "gate_norm", "conv_b",
+                    "A_log", "D", "dt_bias"):
+            return spec(*([None] * len(core)))
+        if last == "embed":
+            return P(self._axis(shape[0], self.tp),
+                     self._axis(shape[1], self.fsdp))
+        if last == "lm_head":
+            return P(self._axis(shape[0], self.fsdp),
+                     self._axis(shape[1], self.tp))
+        if "moe" in name and last in ("w1", "w3") and len(core) == 3:
+            return spec(self._axis(core[0], self.tp),      # [E, D, F]
+                        self._axis(core[1], self.fsdp), None)
+        if "moe" in name and last == "w2" and len(core) == 3:
+            return spec(self._axis(core[0], self.tp), None,  # [E, F, D]
+                        self._axis(core[2], self.fsdp))
+        if last == "router":                            # [D, E]
+            return spec(self._axis(core[0], self.fsdp), None)
+        if last in ("wq", "wk", "wv", "w1", "w3", "in_proj"):
+            return spec(self._axis(core[0], self.fsdp),
+                        self._axis(core[1], self.tp))
+        if last in ("wo", "w2", "out_proj"):
+            return spec(self._axis(core[0], self.tp),
+                        self._axis(core[1], self.fsdp))
+        if last in ("bq", "bk", "bv"):
+            return spec(self._axis(core[0], self.tp))
+        if last == "conv_w":                            # [W, C]
+            return spec(None, self._axis(core[1], self.tp))
+        return spec(*([None] * len(core)))
+
+    def params(self, params_shapes):
+        leaves, treedef = tree_flatten_with_path(params_shapes)
+        out = [NamedSharding(self.mesh, self.param_spec(path, leaf))
+               for path, leaf in leaves]
+        return tree_unflatten(treedef, out)
+
+    def opt_state(self, opt_shapes, param_sharding):
+        """Moments shard like params; step is replicated."""
+        rep = NamedSharding(self.mesh, P())
+        return {"mu": jax.tree.map(lambda s: s, param_sharding),
+                "nu": jax.tree.map(lambda s: s, param_sharding),
+                "step": rep}
+
+    # ------------------------------------------------------------------
+    def activations(self, batch):
+        return NamedSharding(self.mesh, P(self._batch_axis(batch), None))
+
+    def batch_specs(self, batch_shapes):
+        """Shardings for a batch dict of ShapeDtypeStructs: leading dim =
+        batch (sharded over batch axes when divisible)."""
+        def one(leaf):
+            ba = self._batch_axis(leaf.shape[0])
+            return NamedSharding(self.mesh,
+                                 P(*((ba,) + (None,) * (leaf.ndim - 1))))
+        return jax.tree.map(one, batch_shapes)
+
+    def logits_spec(self, batch, vocab=None):
+        V_axis = self._axis(vocab, self.tp) if vocab else self.tp
+        return NamedSharding(self.mesh, P(self._batch_axis(batch), None,
+                                          V_axis))
+
+    def cache_specs(self, cache_shapes):
+        """KV/SSM cache shardings. Leaves are stacked [G, B, ...]:
+        - attn k/v [G, B, S, KV, hd]: batch over batch-axes when divisible,
+          else sequence over 'data' (long_500k B=1); kv-heads over 'model'
+          when divisible.
+        - ssm state [G, B, H, N, P]: batch, heads over 'model' when possible.
+        - conv [G, B, W-1, C]: batch, channels over 'model'.
+        - cross k/v [G, B, n_ctx, KV, hd]: like attn.
+        """
+        def one(path, leaf):
+            name = _path_str(path)
+            s = leaf.shape
+            B = s[1]
+            ba = self._batch_axis(B)
+            used = set(ba or ())
+            if name.endswith("/k") or name.endswith("/v"):
+                # sequence shards over whatever the batch left unused
+                # (mirrors logical rule "seq": (model, data))
+                seq = []
+                prod = 1
+                data = "data" if "data" in self.axis_sizes else None
+                for a in (self.tp, data):
+                    if a and a not in used and \
+                            s[2] % (prod * self.axis_sizes[a]) == 0:
+                        seq.append(a)
+                        prod *= self.axis_sizes[a]
+                seq_axis = tuple(seq) if len(seq) > 1 else \
+                    (seq[0] if seq else None)
+                return NamedSharding(self.mesh, P(
+                    None, ba, seq_axis, None, None))
+            if name.endswith("ssm"):
+                return NamedSharding(self.mesh, P(
+                    None, ba, self._axis(s[2], self.tp), None, None))
+            if name.endswith("conv"):
+                return NamedSharding(self.mesh, P(
+                    None, ba, None, self._axis(s[3], self.tp)))
+            return NamedSharding(self.mesh,
+                                 P(*((None, ba) + (None,) * (leaf.ndim - 2))))
+
+        leaves, treedef = tree_flatten_with_path(cache_shapes)
+        return tree_unflatten(treedef, [one(p, l) for p, l in leaves])
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a real TPU these call the Mosaic-compiled kernels; on this CPU container
+they run in ``interpret=True`` mode (Python-evaluated, numerically identical)
+— selected automatically from the backend so the same call sites work in
+tests, benches and the serving runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.parity_encode import parity_encode as _encode
+from repro.kernels.parity_decode import parity_decode as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode_attn
+
+
+def _interpret():
+    return jax.default_backend() != "tpu"
+
+
+def parity_encode_op(queries, coeffs, **kw):
+    """queries [k, B, ...] (any trailing feature shape); coeffs [k]."""
+    k, B = queries.shape[:2]
+    flat = queries.reshape(k, B, -1)
+    out = _encode(flat, coeffs, interpret=_interpret(), **kw)
+    return out.reshape((B,) + queries.shape[2:])
+
+
+def parity_decode_op(parity_out, outputs, missing_idx, coeffs=None, **kw):
+    """parity_out [B, V]; outputs [k, B, V]; missing_idx python int."""
+    k = outputs.shape[0]
+    c = jnp.ones((k,), jnp.float32) if coeffs is None else \
+        jnp.asarray(coeffs, jnp.float32)
+    avail = c * (jnp.arange(k) != missing_idx)
+    inv_c = 1.0 / c[missing_idx]
+    return _decode(parity_out, outputs, avail, inv_c,
+                   interpret=_interpret(), **kw)
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, **kw):
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_interpret(), **kw)
+
+
+def decode_attention_op(q, k_cache, v_cache, pos, **kw):
+    return _decode_attn(q, k_cache, v_cache, pos, interpret=_interpret(),
+                        **kw)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: ParM subtraction decode —
+``recon = (F_P(P) - sum_i avail_c_i * F(X_i)) / c_missing``.
+
+Same tiling story as parity_encode (memory-bound, lane-aligned feature
+tiles); the availability mask folds the "which output is missing" control
+flow into data so one kernel serves every missing-index case (jit-stable
+shapes on the serving hot path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(c_ref, p_ref, outs_ref, o_ref, *, k):
+    # c_ref [k+1] SMEM-ish (avail coeffs + inv_c at the end)
+    acc = p_ref[...].astype(jnp.float32)
+    for i in range(k):
+        acc -= outs_ref[i].astype(jnp.float32) * c_ref[i]
+    o_ref[...] = (acc * c_ref[k]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v",
+                                             "interpret"))
+def parity_decode(parity_out, outputs, avail_coeffs, inv_c, *, block_b=8,
+                  block_v=512, interpret=False):
+    """parity_out [B, V]; outputs [k, B, V]; avail_coeffs [k] (0 at missing);
+    inv_c scalar. Returns [B, V]."""
+    k, B, V = outputs.shape
+    block_b = min(block_b, B)
+    block_v = min(block_v, V)
+    cvec = jnp.concatenate([avail_coeffs.astype(jnp.float32),
+                            jnp.asarray(inv_c, jnp.float32)[None]])
+    grid = (pl.cdiv(B, block_b), pl.cdiv(V, block_v))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((k, block_b, block_v), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, V), parity_out.dtype),
+        interpret=interpret,
+    )(cvec, parity_out, outputs)

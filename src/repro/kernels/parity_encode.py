@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: ParM parity encoding — P = sum_i c_i * X_i.
+
+Memory-bound elementwise reduction over the (small, static) coding dimension
+k. Queries are flattened to [k, B, F]; the grid tiles (B, F) and each program
+instance streams its k input tiles HBM->VMEM, accumulating in fp32 VREGs.
+Feature tiles are lane-aligned (multiples of 128); batch tiles sublane-aligned
+(multiples of 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(c_ref, q_ref, o_ref, *, k):
+    # q_ref block: [k, bb, bf]; c_ref: [k] in SMEM; o_ref: [bb, bf]
+    acc = q_ref[0].astype(jnp.float32) * c_ref[0]
+    for i in range(1, k):
+        acc += q_ref[i].astype(jnp.float32) * c_ref[i]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_f",
+                                             "interpret"))
+def parity_encode(queries, coeffs, *, block_b=8, block_f=512,
+                  interpret=False):
+    """queries [k, B, F]; coeffs [k] -> [B, F]."""
+    k, B, F = queries.shape
+    block_b = min(block_b, B)
+    block_f = min(block_f, F)
+    grid = (pl.cdiv(B, block_b), pl.cdiv(F, block_f))
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i, j: (0,)),          # coeffs (tiny)
+            pl.BlockSpec((k, block_b, block_f), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, F), queries.dtype),
+        interpret=interpret,
+    )(coeffs.astype(jnp.float32), queries)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernel tests sweep shapes
+and dtypes and assert allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def parity_encode_ref(queries, coeffs):
+    """queries [k, B, F]; coeffs [k] -> parity [B, F] (fp32 accumulate)."""
+    acc = jnp.einsum("k,kbf->bf", coeffs.astype(jnp.float32),
+                     queries.astype(jnp.float32))
+    return acc.astype(queries.dtype)
+
+
+def parity_decode_ref(parity_out, outputs, avail_coeffs, inv_c):
+    """parity_out [B, V]; outputs [k, B, V]; avail_coeffs [k] (0 at the
+    missing index, code coefficient elsewhere); inv_c scalar = 1/c_missing.
+    Returns reconstruction [B, V]."""
+    s = jnp.einsum("k,kbv->bv", avail_coeffs.astype(jnp.float32),
+                   outputs.astype(jnp.float32))
+    return ((parity_out.astype(jnp.float32) - s) * inv_c).astype(
+        parity_out.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,Sq,H,hd]; k,v [B,Sk,KV,hd] -> [B,Sq,H,hd] (naive softmax)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q [B,H,hd]; caches [B,S,KV,hd]; pos scalar (valid slots: <= pos).
+    Returns [B,H,hd]."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    if KV != H:
+        k_cache = jnp.repeat(k_cache, H // KV, axis=2)
+        v_cache = jnp.repeat(v_cache, H // KV, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

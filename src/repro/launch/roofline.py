@@ -1,0 +1,135 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` of the SPMD-partitioned executable is *per device*
+(verified empirically; see EXPERIMENTS.md §Dry-run methodology), so
+
+    compute term    = flops_per_device / peak_flops
+    memory term     = bytes_per_device / hbm_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Collective bytes are not in cost_analysis; we parse the compiled (post-SPMD,
+per-device) HLO text and sum the result-buffer sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+LINK_BW = 50e9               # bytes / s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.:  %all-gather.3 = bf16[16,4096,1408]{2,1,0} all-gather(
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_ONE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text):
+    """Sum per-device result bytes of collective ops, bucketed by op kind."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _SHAPE_RE.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        if f" {op}(" not in line and f" {op}-start(" not in line:
+            continue
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _ONE_SHAPE.findall(shapes_str))
+        out[op] += total
+        count[op] += 1
+    return out, count
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_detail: dict
+    coll_counts: dict
+    chips: int
+
+    @property
+    def compute_s(self):
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_detail": self.coll_detail,
+            "coll_counts": self.coll_counts,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, chips):
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    detail, counts = collective_bytes(compiled.as_text())
+    coll = float(sum(detail.values()))
+    return Roofline(flops, byts, coll, detail, counts, chips)
+
+
+def model_flops(cfg, n_tokens, n_params=None, active_params=None):
+    """MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE)."""
+    n = active_params if active_params is not None else n_params
+    return 6.0 * n * n_tokens
+
+
+def active_param_count(cfg, n_params):
+    """Approximate active params for MoE: replace full expert banks with the
+    top-k (+shared) slice."""
+    if not cfg.n_experts:
+        return n_params
+    expert_p = 3 * cfg.d_model * cfg.moe_d_ff       # w1,w2,w3 per expert
+    n_moe_layers = cfg.n_layers // cfg.moe_every
+    total_experts = n_moe_layers * cfg.n_experts * expert_p
+    active_experts = n_moe_layers * cfg.moe_top_k * expert_p
+    return n_params - total_experts + active_experts

@@ -1,0 +1,174 @@
+"""Step functions + ShapeDtypeStruct input specs for every
+(architecture x input-shape) dry-run combination. No device allocation —
+everything here is shape-level until jit.lower()."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.models import transformer as T
+from repro.training.loss import lm_loss
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+
+def pick_opt_config(cfg, n_params):
+    """bf16 Adam moments for >=100B-param archs so train_4k fits 16GB HBM
+    (DESIGN.md 'Assumptions changed')."""
+    mdt = "bfloat16" if n_params > 3e10 else "float32"
+    return AdamConfig(lr=3e-4, weight_decay=0.1, moment_dtype=mdt)
+
+
+def param_shapes(cfg, seed=0):
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(seed)))
+
+
+def n_params_of(shapes):
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+def input_specs(cfg, shape_name, dtype=None):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    dt = dtype or cfg.dtype
+    i32 = jnp.int32
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if sh.kind == "train":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["cross_embeds"] = sds((B, cfg.n_modality_tokens,
+                                         cfg.d_model), dt)
+        if cfg.enc_dec:
+            batch["frames"] = sds((B, S, cfg.d_model), dt)
+        return batch
+    if sh.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["cross_embeds"] = sds((B, cfg.n_modality_tokens,
+                                         cfg.d_model), dt)
+        if cfg.enc_dec:
+            batch["frames"] = sds((B, S, cfg.d_model), dt)
+        return batch
+    if sh.kind == "decode":
+        return {"token": sds((B, 1), i32)}
+    raise ValueError(sh.kind)
+
+
+def cache_shapes(cfg, shape_name):
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, sh.global_batch, sh.seq_len))
+
+
+# --------------------------------------------------------------------------
+def logits_pspec(batch_axes=("data",)):
+    from jax.sharding import PartitionSpec as P
+    return P(batch_axes, None, "model")
+
+
+def make_train_step(cfg, opt_cfg, shard_logits=True,
+                    batch_axes=("data",), microbatch=0):
+    """``microbatch`` > 1 splits the global batch into that many
+    gradient-accumulation steps (lax.scan): live activations and fp32
+    loss/grad temporaries shrink ~linearly at the cost of re-running the
+    (already remat'd) forward per slice — the §Perf lever for the
+    memory-dominated train_4k pairs."""
+    lspec = logits_pspec(batch_axes) if shard_logits else None
+
+    def loss_fn(p, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["cross_embeds"] = batch["cross_embeds"]
+        if cfg.enc_dec:
+            kw["cross_embeds"] = batch["frames"]
+        logits, aux = T.forward(cfg, p, tokens=batch["tokens"],
+                                remat=True, logits_pspec=lspec, **kw)
+        return lm_loss(logits, batch["tokens"], aux, cfg.router_aux_coef)
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            m = microbatch
+            mb = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def acc_body(carry, one):
+                g_acc, l_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, one)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / m, g_acc, grads)
+                return (g_acc, l_acc + loss / m), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body,
+                                            (g0, jnp.zeros(())), mb)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["cross_embeds"] = batch["cross_embeds"]
+        if cfg.enc_dec:
+            kw["cross_embeds"] = batch["frames"]
+        logits, cache = T.prefill(cfg, params, tokens=batch["tokens"], **kw)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg, pos):
+    def decode_step(params, cache, batch):
+        return T.decode_step(cfg, params, cache, pos, token=batch["token"])
+    return decode_step
+
+
+def make_coded_serve_step(cfg, k=2, optimized=False):
+    """The paper's technique as one fused pjit program (prefill flavour):
+    embed k member query batches, encode (addition, embedding space §3.2 /
+    DESIGN.md §3), run the parity model, and return the parity output the
+    decoder consumes. The §Perf 'technique-representative' hillclimb pair.
+
+    ``optimized=False`` — paper-faithful baseline: per-member embedding
+    (vmap over k, as the frontend would embed each query) and the full
+    parity logit sequence.
+    ``optimized=True``  — beyond-paper: (a) one fused gather over the
+    [k*B, S] token block instead of k serialized gathers, (b) unembed only
+    the positions the LM decoder actually consumes (the last token) —
+    dropping the [B, S, V] parity-logit matmul to [B, 1, V].
+    """
+    def coded_step(parity_params, batch):
+        toks = batch["tokens"]                  # [k, B, S]
+        kk, B, S = toks.shape
+        if optimized:
+            flat = T.embed_tokens(cfg, parity_params,
+                                  toks.reshape(kk * B, S))
+            parity_q = flat.reshape(kk, B, S, -1).sum(axis=0)
+            logits, _ = T.forward(cfg, parity_params, embeds=parity_q,
+                                  unembed_last_only=True)
+            return logits, {}
+        embeds = jax.vmap(lambda t: T.embed_tokens(cfg, parity_params, t))(
+            toks)                               # [k, B, S, D]
+        parity_q = embeds.sum(axis=0)
+        logits, _ = T.forward(cfg, parity_params, embeds=parity_q)
+        return logits[:, -1:], {}
+    return coded_step
+
+
+def coded_input_specs(cfg, shape_name, k=2):
+    sh = SHAPES[shape_name]
+    return {"tokens": jax.ShapeDtypeStruct(
+        (k, sh.global_batch, sh.seq_len), jnp.int32)}

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        [--reduced] [--steps 50] [--batch 8] [--seq 64] [--ckpt out.npz]
+
+On this CPU container use ``--reduced`` (the default) — full configs are for
+the pod mesh (see repro.launch.dryrun). Trains on the synthetic Markov LM
+stream, logs loss, and optionally checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import save
+from repro.configs.base import ARCH_IDS, get_config
+from repro.data.pipeline import lm_batches
+from repro.launch.steps import n_params_of, param_shapes
+from repro.models import transformer as T
+from repro.training.optim import AdamConfig, adam_init
+from repro.training.train_lib import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod-scale; not for this CPU host)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    print(f"arch={cfg.name} params~{n_params_of(param_shapes(cfg)):,}")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt_cfg = AdamConfig(lr=args.lr, grad_clip=1.0)
+    opt_state = adam_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+
+    data = lm_batches(cfg.vocab, args.batch, args.seq, args.steps, seed=0)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(data[i])[:, : args.seq]}
+        if cfg.family == "vlm":
+            batch["cross_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(i),
+                (args.batch, cfg.n_modality_tokens, cfg.d_model))
+        if cfg.enc_dec:
+            batch["frames"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(i), (args.batch, args.seq, cfg.d_model))
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.ckpt:
+        save(args.ckpt, params, step=args.steps)
+        print(f"checkpoint written to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""The paper's own deployed-model family for image tasks: the 2-hidden-layer
+MLP, a LeNet-5-style CNN, and a small ResNet (CIFAR-scale). Used by the
+accuracy-reproduction benches (paper Figs 6/7/9/10); parity models reuse the
+same architectures per §3.3 of the paper.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense(key, shape):
+    return jax.random.normal(key, shape) * math.sqrt(2.0 / shape[0])
+
+
+def _conv(key, shape):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape) * math.sqrt(2.0 / fan_in)
+
+
+def conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------- MLP ----
+def init_mlp(key, in_dim, hidden=(200, 100), n_out=10):
+    dims = (in_dim,) + tuple(hidden) + (n_out,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"w": [_dense(ks[i], (dims[i], dims[i + 1]))
+                  for i in range(len(dims) - 1)],
+            "b": [jnp.zeros((dims[i + 1],)) for i in range(len(dims) - 1)]}
+
+
+def mlp_fwd(p, x):
+    x = x.reshape(x.shape[0], -1)
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < len(p["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------- LeNet ----
+def init_lenet(key, image_shape=(32, 32, 3), channels=(6, 16), n_out=10):
+    ks = jax.random.split(key, 4)
+    c_in = image_shape[-1]
+    flat = (image_shape[0] // 4) * (image_shape[1] // 4) * channels[1]
+    return {
+        "c1": _conv(ks[0], (5, 5, c_in, channels[0])),
+        "c2": _conv(ks[1], (5, 5, channels[0], channels[1])),
+        "fc": init_mlp(ks[2], flat, (120, 84), n_out),
+    }
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def lenet_fwd(p, x):
+    x = _pool(jax.nn.relu(conv2d(x, p["c1"])))
+    x = _pool(jax.nn.relu(conv2d(x, p["c2"])))
+    return mlp_fwd(p["fc"], x)
+
+
+# -------------------------------------------------------------- ResNet ----
+def init_resnet(key, image_shape=(32, 32, 3), stages=(16, 32, 64), n_out=10,
+                blocks_per_stage=2):
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": _conv(next(ks), (3, 3, image_shape[-1], stages[0])),
+         "stages": []}
+    c_in = stages[0]
+    for c in stages:
+        blocks = []
+        for b in range(blocks_per_stage):
+            blk = {"c1": _conv(next(ks), (3, 3, c_in if b == 0 else c, c)),
+                   "c2": _conv(next(ks), (3, 3, c, c))}
+            if b == 0 and c_in != c:
+                blk["proj"] = _conv(next(ks), (1, 1, c_in, c))
+            blocks.append(blk)
+        p["stages"].append(blocks)
+        c_in = c
+    p["head"] = _dense(next(ks), (c_in, n_out))
+    p["head_b"] = jnp.zeros((n_out,))
+    return p
+
+
+def resnet_fwd(p, x):
+    x = jax.nn.relu(conv2d(x, p["stem"]))
+    for si, blocks in enumerate(p["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = jax.nn.relu(conv2d(x, blk["c1"], stride))
+            h = conv2d(h, blk["c2"])
+            sc = x if "proj" not in blk else conv2d(x, blk["proj"], stride)
+            if stride == 2 and "proj" not in blk:
+                sc = sc[:, ::2, ::2, :]
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ p["head"] + p["head_b"]
+
+
+MODEL_FNS = {"mlp": (init_mlp, mlp_fwd),
+             "lenet": (init_lenet, lenet_fwd),
+             "resnet": (init_resnet, resnet_fwd)}
+
+
+def build(kind, key, image_shape=(32, 32, 3), n_out=10):
+    if kind == "mlp":
+        in_dim = int(jnp.prod(jnp.array(image_shape)))
+        return init_mlp(key, in_dim, n_out=n_out), mlp_fwd
+    if kind == "lenet":
+        return init_lenet(key, image_shape, n_out=n_out), lenet_fwd
+    if kind == "resnet":
+        return init_resnet(key, image_shape, n_out=n_out), resnet_fwd
+    raise ValueError(kind)

@@ -1,0 +1,17 @@
+"""Linear deployed model — for property tests of the coding layer.
+
+For any *linear* F, the paper's addition/subtraction code is exact with the
+identity parity model F_P = F (Table 1, row 1). The hypothesis tests in
+``tests/test_coding_properties.py`` assert this exactness invariant for the
+encoder/decoder pair, including r > 1 Vandermonde codes.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def init_linear(key, d_in, d_out):
+    return {"w": jax.random.normal(key, (d_in, d_out)) / jnp.sqrt(d_in)}
+
+
+def linear_fwd(p, x):
+    return x.reshape(x.shape[0], -1) @ p["w"]

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) mixer layer.
+
+Training/prefill uses the chunked SSD algorithm [arXiv:2405.21060]: the
+sequence is split into chunks of length Q; within-chunk interactions are
+computed as a masked quadratic form (attention-like, maps onto the MXU), and
+chunk-to-chunk interaction flows through a small recurrent state carried by a
+``lax.scan`` — O(L·Q) instead of O(L^2). Decode is the pure recurrence:
+``h' = a·h + Δx ⊗ B;  y = C·h' + D·x`` with O(1) state, which is what makes
+``long_500k`` native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.logical import constrain
+from repro.models.layers import make_norm, rms_norm
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    return di, H, P, N, G, conv_dim
+
+
+def init_mamba(cfg, key):
+    D = cfg.d_model
+    di, H, P, N, G, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    dt = cfg.dtype
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dt)
+
+    d_in_proj = 2 * di + 2 * G * N + H
+    # dt bias: inverse softplus of dt ~ U[1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (H,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt0 = jnp.exp(u)
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "in_proj": dense(ks[0], (D, d_in_proj), D),
+        "conv_w": dense(ks[1], (cfg.ssm_conv, conv_dim), cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (H,), minval=1.0,
+                                            maxval=16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": dense(ks[4], (di, D), di),
+        "norm": make_norm(cfg, D),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x [B, L, C]; w [W, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(y + b)
+
+
+def _split_in(cfg, p, x):
+    di, H, P, N, G, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    return z, xBC, dt
+
+
+def ssd_fwd(cfg, p, x, *, init_state=None, return_state=False):
+    """Full-sequence SSD. x [B, L, D] -> (y [B, L, D], state|None).
+
+    ``init_state``/``return_state`` support prefill -> decode handoff.
+    """
+    B, L0, D = x.shape
+    di, H, P, N, G, conv_dim = _dims(cfg)
+    Q = min(cfg.ssm_chunk, L0)
+    pad = (-L0) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    L = L0 + pad
+    nc = L // Q
+
+    z, xBC, dt = _split_in(cfg, p, x)
+    if pad:
+        # make padded steps identity: delta -> 0 => a=1, dx=0
+        step_mask = jnp.arange(L) < L0
+        dt = jnp.where(step_mask[None, :, None], dt, -1e9)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, L, H, P)
+    Bm = Bm.reshape(B, L, G, N)
+    Cm = Cm.reshape(B, L, G, N)
+
+    xs = constrain(xs, ("batch", None, "heads", None))
+    delta = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,L,H]
+    loga = constrain(-jnp.exp(p["A_log"]) * delta,
+                     ("batch", None, "heads"))                       # [B,L,H]
+    dx = (xs.astype(jnp.float32) * delta[..., None])                 # Δ·x
+
+    # chunk views
+    def ch(t, extra):
+        return t.reshape((B, nc, Q) + extra)
+
+    dxc = ch(dx, (H, P))
+    Bc = ch(Bm.astype(jnp.float32), (G, N))
+    Cc = ch(Cm.astype(jnp.float32), (G, N))
+    lac = ch(loga, (H,))
+    cum = jnp.cumsum(lac, axis=2)                                    # [B,nc,Q,H]
+
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                                 # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk (quadratic, parallel over chunks) ----
+    # scores[b,c,h,i,j] = (C_i . B_j) * exp(cum_i - cum_j), i >= j
+    cb = constrain(jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh),
+                   ("batch", None, "heads", None, None))
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])     # [B,nc,i,j,H]
+    dec = dec.transpose(0, 1, 4, 2, 3)                               # [B,nc,H,i,j]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    scores = jnp.where(mask[None, None, None], cb * dec, 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, dxc)
+
+    # ---- chunk state + inter-chunk recurrence ----
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                           # exp(cum_Q - cum_j)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bh, seg, dxc)     # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                          # [B,nc,H]
+
+    h0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    h0 = constrain(h0, ("batch", "heads", None, None))
+
+    def scan_body(h, inp):
+        st, cdk = inp                                                # [B,H,N,P],[B,H]
+        h_new = h * cdk[..., None, None] + st
+        return h_new, h
+
+    xs_scan = (states.transpose(1, 0, 2, 3, 4),
+               chunk_decay.transpose(1, 0, 2))
+    h_final, h_prevs = jax.lax.scan(scan_body, h0, xs_scan)
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                       # [B,nc,H,N,P]
+
+    inter_dec = jnp.exp(cum)                                         # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp", Ch, inter_dec, h_prevs)
+
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["gate_norm"])
+    out = (y @ p["out_proj"])[:, :L0]
+    if return_state:
+        conv_tail = xBC_tail(cfg, x[:, :L0], p)
+        return out, {"ssm": h_final.astype(jnp.float32), "conv": conv_tail}
+    return out, None
+
+
+def xBC_tail(cfg, x, p):
+    """Last (conv_width - 1) pre-conv xBC rows, for decode handoff."""
+    _, xBC, _ = _split_in(cfg, p, x)
+    return xBC[:, -(cfg.ssm_conv - 1):, :]
+
+
+def init_ssm_cache(cfg, batch):
+    di, H, P, N, G, conv_dim = _dims(cfg)
+    return {"ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype)}
+
+
+def ssd_decode(cfg, p, x, cache):
+    """One-step recurrence. x [B, 1, D] -> (y [B, 1, D], new cache)."""
+    B = x.shape[0]
+    di, H, P, N, G, conv_dim = _dims(cfg)
+    z, xBC, dt = _split_in(cfg, p, x)                 # [B,1,*]
+    xBC = xBC[:, 0]
+    # conv over (cached tail ++ current)
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # [B,W,C]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, p["conv_w"])
+                           + p["conv_b"])
+    new_conv = win[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                  # [B,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    delta = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"]) * delta)         # [B,H]
+    dx = xs * delta[..., None]                        # [B,H,P]
+    h = cache["ssm"] * a[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", Bh, dx)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["gate_norm"])
+    return y @ p["out_proj"], {"ssm": h, "conv": new_conv}

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts FFN — GShard-style top-k routing with fixed expert
+capacity, implemented with scatter/gather dispatch (no [T, E, C] one-hot
+tensor is ever materialised).
+
+Sharding intent (see repro.distributed.sharding): expert weight tensors
+[E, D, F] shard E over the 'model' axis and D over 'data' (FSDP); the
+dispatch buffer [E, C, D] shards E over 'model' and C over 'data', so the
+scatter/gather lowers to an all-to-all between the token-sharded and
+expert-sharded layouts — the canonical expert-parallel schedule.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.logical import constrain
+from repro.models.layers import make_norm
+
+
+def init_moe(cfg, key):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.dtype
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dt)
+
+    p = {
+        "router": dense(ks[0], (D, E), D).astype(jnp.float32),
+        "w1": dense(ks[1], (E, D, F), D),
+        "w3": dense(ks[2], (E, D, F), D),
+        "w2": dense(ks[3], (E, F, D), F),
+        "norm": make_norm(cfg, D),
+    }
+    if cfg.n_shared_experts:
+        # shared experts fused into one dense SwiGLU of width n_shared * F
+        SF = cfg.n_shared_experts * F
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": dense(sk[0], (D, SF), D),
+            "w3": dense(sk[1], (D, SF), D),
+            "w2": dense(sk[2], (SF, D), SF),
+        }
+    return p
+
+
+def expert_capacity(n_tokens, cfg):
+    c = int(math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)   # round up to multiple of 8
+
+
+def moe_fwd(cfg, p, x, capacity=None):
+    """x [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Two execution paths:
+      * dense/global (CPU tests, single device): scatter/gather in the global
+        program.
+      * expert-parallel shard_map (active when launcher logical rules carry a
+        mesh with a 'model' axis dividing n_experts): replicated routing +
+        local dispatch + per-layer FSDP weight all-gather + one psum('model')
+        for the combine. XLA's SPMD partitioner lowers the *global* scatter
+        to a replicated fallback (213 GiB/chip on deepseek train_4k —
+        EXPERIMENTS.md §Perf iteration 1), so the explicit schedule is the
+        production path, not an optimisation.
+    """
+    from repro.distributed import logical
+    rules, sizes, mesh = logical.state()
+    if (rules is not None and mesh is not None and sizes.get("model", 1) > 1
+            and cfg.n_experts % sizes["model"] == 0):
+        return _moe_fwd_ep(cfg, p, x, rules, sizes, mesh, capacity)
+    return _moe_fwd_global(cfg, p, x, capacity)
+
+
+def _moe_fwd_global(cfg, p, x, capacity=None):
+    """Reference global-program path."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    C = capacity or expert_capacity(T, cfg)
+    xt = constrain(x.reshape(T, D), ("tokens", None))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)             # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalise
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    me = probs.mean(axis=0)                                   # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, k) assignment within its expert, GShard cumsum
+    flat_e = gate_idx.reshape(-1)                             # [T*K]
+    onehot = constrain(jax.nn.one_hot(flat_e, E, dtype=jnp.int32),
+                       ("tokens", None))                      # [T*K, E]
+    pos = (jnp.cumsum(onehot, axis=0) - 1)                    # [T*K, E]
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+
+    # scatter tokens into per-expert buffers; overflow (pos >= C) is dropped.
+    # buf shards E over 'model' (expert parallel) and C over 'data', so the
+    # token->expert scatter lowers to the canonical all-to-all
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    buf = constrain(jnp.zeros((E, C, D), x.dtype),
+                    ("experts", "capacity", None)).at[flat_e, pos].add(
+        xt[tok_idx], mode="drop")
+    buf = constrain(buf, ("experts", "capacity", None))
+
+    # expert SwiGLU: [E, C, D] x [E, D, F]
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = constrain(jnp.einsum("ecf,efd->ecd", h, p["w2"]),
+                  ("experts", "capacity", None))
+
+    # gather back with gate weights; dropped tokens contribute zero
+    valid = (pos < C)
+    got = h[flat_e, jnp.minimum(pos, C - 1)]                  # [T*K, D]
+    got = got * (gate_vals.reshape(-1) * valid).astype(got.dtype)[:, None]
+    out = constrain(jnp.zeros((T, D), x.dtype).at[tok_idx].add(got),
+                    ("tokens", None))
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sh = jax.nn.silu(xt @ sp["w1"]) * (xt @ sp["w3"])
+        out = out + sh @ sp["w2"]
+
+    return out.reshape(B, S, D), aux
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel shard_map path
+# --------------------------------------------------------------------------
+def _moe_fwd_ep(cfg, p, x, rules, sizes, mesh, capacity=None):
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    E, K, D, F = cfg.n_experts, cfg.moe_top_k, cfg.d_model, cfg.moe_d_ff
+    tp = sizes["model"]
+    E_loc = E // tp
+    all_axes = tuple(mesh.axis_names)
+    B, S, _ = x.shape
+    # shard batch over the largest prefix of the batch axes that divides B
+    batch_axes = []
+    n_batch_shards = 1
+    for a in rules.get("batch", ("data",)):
+        if a not in sizes:
+            continue
+        if B % (n_batch_shards * sizes[a]) == 0:
+            batch_axes.append(a)
+            n_batch_shards *= sizes[a]
+        else:
+            break
+    batch_axes = tuple(batch_axes)
+    T_loc = (B // n_batch_shards) * S
+    C = capacity or expert_capacity(T_loc, cfg)
+
+    has_shared = bool(cfg.n_shared_experts)
+
+    fsdp = rules.get("fsdp_params", True) and "data" in sizes
+
+    def inner(xb, router, w1, w3, w2, *shared_w):
+        # xb [B_loc, S, D]; router [D, E] (replicated);
+        # w1/w3 [E_loc, D(_loc), F]; w2 [E_loc, F, D(_loc)]
+        m_idx = jax.lax.axis_index("model")
+        xt = xb.reshape(-1, D)
+        probs = jax.nn.softmax(xt.astype(jnp.float32) @ router, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # local aux loss, averaged over every mesh axis (identical result on
+        # all shards because routing inputs are replicated over 'model')
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+            1.0 / (xt.shape[0] * K))
+        aux = E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, all_axes)
+
+        # assignments owned by this model-shard's experts
+        flat_e = gate_idx.reshape(-1)                      # [T_loc*K]
+        local_e = flat_e - m_idx * E_loc
+        own = (local_e >= 0) & (local_e < E_loc)
+        le = jnp.where(own, local_e, 0)
+        oh = jax.nn.one_hot(jnp.where(own, local_e, E_loc), E_loc + 1,
+                            dtype=jnp.int32)
+        pos = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=0) - 1,
+            jnp.where(own, local_e, E_loc)[:, None], axis=1)[:, 0]
+        pos = jnp.where(own, pos, C)                       # -> dropped
+
+        tok_idx = jnp.repeat(jnp.arange(xt.shape[0]), K)
+        buf = jnp.zeros((E_loc, C, D), x.dtype).at[le, pos].add(
+            xt[tok_idx] * own[:, None].astype(x.dtype), mode="drop")
+
+        # FSDP gather of this shard's expert weights (per layer, transient);
+        # inference layout (fsdp_params=False) keeps them resident instead
+        if fsdp:
+            w1g = jax.lax.all_gather(w1, "data", axis=1, tiled=True)
+            w3g = jax.lax.all_gather(w3, "data", axis=1, tiled=True)
+            w2g = jax.lax.all_gather(w2, "data", axis=2, tiled=True)
+        else:
+            w1g, w3g, w2g = w1, w3, w2
+
+        h = jnp.einsum("ecd,edf->ecf", buf, w1g)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3g)
+        h = jnp.einsum("ecf,efd->ecd", h, w2g)
+
+        ok = own & (pos < C)
+        got = h[le, jnp.minimum(pos, C - 1)]
+        got = got * (gate_vals.reshape(-1) * ok).astype(got.dtype)[:, None]
+        out = jnp.zeros_like(xt).at[tok_idx].add(got)
+
+        if has_shared:
+            sw1, sw3, sw2 = shared_w                       # [D(_loc),SF_loc]
+            if fsdp:
+                sw1 = jax.lax.all_gather(sw1, "data", axis=0, tiled=True)
+                sw3 = jax.lax.all_gather(sw3, "data", axis=0, tiled=True)
+                sw2 = jax.lax.all_gather(sw2, "data", axis=1, tiled=True)
+            sh = jax.nn.silu(xt @ sw1) * (xt @ sw3)        # [T, SF_loc]
+            out = out + sh @ sw2                           # partial over SF
+        out = jax.lax.psum(out, "model")
+        return out.reshape(xb.shape), aux
+
+    bspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None,
+              None) if batch_axes else P(None, None, None)
+    dd = "data" if fsdp else None
+    in_specs = [bspec,
+                P(None, None),                             # router replicated
+                P("model", dd, None),
+                P("model", dd, None),
+                P("model", None, dd)]
+    args = [x, p["router"], p["w1"], p["w3"], p["w2"]]
+    if has_shared:
+        in_specs += [P(dd, "model"), P(dd, "model"), P("model", dd)]
+        args += [p["shared"]["w1"], p["shared"]["w3"], p["shared"]["w2"]]
+    out, aux = shard_map(
+        inner, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(bspec, P()), check_rep=False)(*args)
+    return out, aux

@@ -1,0 +1,242 @@
+"""Threaded prediction-serving runtime with ParM coded resilience.
+
+A faithful (single-host) analogue of the paper's Clipper-based deployment:
+a frontend with a single dispatch queue per pool (the load-balancing strategy
+of §5.1), model-instance worker threads running real JAX inference, coding
+groups of k consecutively dispatched query batches, frontend-side encode, and
+on-unavailability decode. Slowdowns are injected per instance (sleep), since
+the mitigation is agnostic to the cause (§2.2).
+
+Used by the end-to-end example (examples/serve_parm.py) and integration tests;
+the 100k-query tail studies use the DES in ``repro.serving.simulator``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codes import SumEncoder, LinearDecoder
+
+
+@dataclass
+class Query:
+    qid: int
+    data: np.ndarray
+    arrival: float = 0.0
+    event: threading.Event = field(default_factory=threading.Event)
+    result: Optional[np.ndarray] = None
+    completed_by: str = ""
+    finish: float = 0.0
+
+    def fulfill(self, result, how, now=None):
+        if not self.event.is_set():
+            self.result = result
+            self.completed_by = how
+            self.finish = now or time.perf_counter()
+            self.event.set()
+
+    @property
+    def latency_ms(self):
+        return (self.finish - self.arrival) * 1e3
+
+
+class ModelInstance(threading.Thread):
+    """Worker pulling (tag, payload) items off a shared pool queue."""
+
+    def __init__(self, iid, pool_q, fwd, params, on_done,
+                 delay_fn: Optional[Callable[[int], float]] = None):
+        super().__init__(daemon=True)
+        self.iid = iid
+        self.pool_q = pool_q
+        self.fwd = fwd
+        self.params = params
+        self.on_done = on_done
+        self.delay_fn = delay_fn
+        self.stop = False
+
+    def run(self):
+        while not self.stop:
+            try:
+                item = self.pool_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            tag, payload, x = item
+            if self.delay_fn:
+                d = self.delay_fn(self.iid)
+                if d > 0:
+                    time.sleep(d)
+            out = np.asarray(self.fwd(self.params, x))
+            self.on_done(tag, payload, out)
+
+
+class ParMFrontend:
+    """Frontend: group assembly, encode, dispatch, decode-on-unavailability.
+
+    mode: "parm" | "equal_resources" | "default_slo" (Clipper default
+    prediction at the SLO deadline, §4.1 baseline)."""
+
+    def __init__(self, fwd, deployed_params, parity_params=None, *, k=2,
+                 r=1, m=4, mode="parm", delay_fn=None, encode_fn=None,
+                 decode_fn=None, default_prediction=None, slo_ms=None):
+        """``r > 1`` (paper §3.5): ``parity_params`` is a list of r parity
+        models, each trained to the j-th Vandermonde combination; r parity
+        queries are dispatched per coding group and the decoder solves the
+        linear system for up to r concurrent unavailabilities."""
+        self.k, self.r, self.mode = k, r, mode
+        self.encoder = SumEncoder(k, r)
+        self.decoder = LinearDecoder(k, r)
+        self._coeffs = np.asarray(self.encoder.coeffs)
+        self.encode_fn = encode_fn or (lambda q: np.asarray(self.encoder(q)))
+        self.decode_fn = decode_fn
+        self.default_prediction = default_prediction
+        self.slo_ms = slo_ms
+        self.queries = {}
+        self.groups = {}   # gid -> {"members", "outs", "parity": {j: out}}
+        self.lock = threading.Lock()
+        self._next_gid = 0
+        self._pending_group = []
+
+        self.main_q = queue.Queue()
+        n_parity = max(1, m // k)
+        self.workers = []
+        n_main = m + (n_parity * r if mode == "equal_resources" else 0)
+        for i in range(n_main):
+            w = ModelInstance(i, self.main_q, fwd, deployed_params,
+                              self._on_model_done, delay_fn)
+            w.start()
+            self.workers.append(w)
+        if mode == "parm":
+            if r == 1 and not isinstance(parity_params, (list, tuple)):
+                parity_params = [parity_params]
+            assert len(parity_params) == r
+            self.parity_qs = []
+            for j in range(r):
+                pq = queue.Queue()
+                self.parity_qs.append(pq)
+                for i in range(n_parity):
+                    w = ModelInstance(1000 + 100 * j + i, pq, fwd,
+                                      parity_params[j],
+                                      self._on_parity_done, delay_fn)
+                    w.start()
+                    self.workers.append(w)
+            self.parity_q = self.parity_qs[0]      # back-compat alias
+
+    # ------------------------------------------------------------------
+    def submit(self, qid, x):
+        """x: one query batch (leading batch dim, usually 1)."""
+        q = Query(qid, x, arrival=time.perf_counter())
+        with self.lock:
+            self.queries[qid] = q
+            if self.mode == "parm":
+                self._pending_group.append(qid)
+                self.gid_of = getattr(self, "gid_of", {})
+                self.gid_of[qid] = self._next_gid
+                if len(self._pending_group) == self.k:
+                    gid = self._next_gid
+                    members = list(self._pending_group)
+                    self._pending_group.clear()
+                    self._next_gid += 1
+                    self.groups[gid] = {"members": members, "outs": {},
+                                        "parity": {}}
+                    # frontend-side encode (1/k network overhead, §3.1);
+                    # r parity queries, one per parity model (§3.5)
+                    parities = self.encode_fn(
+                        np.stack([self.queries[m].data for m in members]))
+                    for j, pq in enumerate(self.parity_qs):
+                        pq.put(("parity", (gid, j), parities[j]))
+        self.main_q.put(("query", qid, x))
+        if self.mode == "default_slo" and self.slo_ms is not None:
+            t = threading.Timer(self.slo_ms / 1e3, self._default_fire,
+                                args=(qid,))
+            t.daemon = True
+            t.start()
+        return q
+
+    def _default_fire(self, qid):
+        q = self.queries[qid]
+        q.fulfill(self.default_prediction, "default")
+
+    # ------------------------------------------------------------------
+    def _on_model_done(self, tag, qid, out):
+        q = self.queries[qid]
+        q.fulfill(out, "model")
+        if self.mode != "parm":
+            return
+        with self.lock:
+            gid = self.gid_of.get(qid)
+            info = self.groups.get(gid)
+            if info is not None:
+                info["outs"][qid] = out
+                self._maybe_decode(gid, info)
+
+    def _on_parity_done(self, tag, key, out):
+        gid, j = key
+        with self.lock:
+            info = self.groups.get(gid)
+            if info is None:
+                return
+            info["parity"][j] = out
+            self._maybe_decode(gid, info)
+
+    def _maybe_decode(self, gid, info):
+        """Called with lock held: reconstruct up to ``n_parities_arrived``
+        missing predictions (r=1 fast path: subtraction decoder)."""
+        n_par = len(info["parity"])
+        missing = [m for m in info["members"] if m not in info["outs"]
+                   and not self.queries[m].event.is_set()]
+        if not missing or len(missing) > n_par:
+            return
+        any_out = next(iter(info["parity"].values()))
+        outs = np.stack([info["outs"].get(m, np.zeros_like(any_out))
+                         for m in info["members"]])
+        if self.r == 1 and len(missing) == 1:
+            j = info["members"].index(missing[0])
+            if self.decode_fn is not None:
+                recon = self.decode_fn(info["parity"][0], outs, j)
+            else:
+                recon = np.asarray(self.decoder.decode_one(
+                    info["parity"][0], outs, j))
+            self.queries[missing[0]].fulfill(recon, "parity")
+            return
+        parity_outs = np.stack([
+            info["parity"].get(j, np.zeros_like(any_out))
+            for j in range(self.r)])
+        parity_avail = np.array([j in info["parity"]
+                                 for j in range(self.r)])
+        miss_mask = np.array([m in missing for m in info["members"]])
+        recon = np.asarray(self.decoder.decode(
+            jnp.asarray(parity_outs), jnp.asarray(outs),
+            jnp.asarray(miss_mask), jnp.asarray(parity_avail)))
+        for m in missing:
+            idx = info["members"].index(m)
+            self.queries[m].fulfill(recon[idx], "parity")
+
+    # ------------------------------------------------------------------
+    def wait_all(self, timeout=60.0):
+        deadline = time.time() + timeout
+        for q in self.queries.values():
+            q.event.wait(max(0.0, deadline - time.time()))
+        return all(q.event.is_set() for q in self.queries.values())
+
+    def shutdown(self):
+        for w in self.workers:
+            w.stop = True
+        for w in self.workers:
+            w.join(timeout=1.0)
+
+    def stats(self):
+        lats = np.array([q.latency_ms for q in self.queries.values()
+                         if q.event.is_set()])
+        by = {}
+        for q in self.queries.values():
+            by[q.completed_by] = by.get(q.completed_by, 0) + 1
+        return {"median_ms": float(np.percentile(lats, 50)),
+                "p99_ms": float(np.percentile(lats, 99)) if len(lats) > 1 else float(lats.max()),
+                "max_ms": float(lats.max()),
+                "completed_by": by, "n": len(lats)}

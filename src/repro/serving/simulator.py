@@ -1,0 +1,249 @@
+"""Discrete-event simulator of the ParM serving cluster (paper §5).
+
+Reproduces the paper's tail-latency methodology without EC2: Poisson query
+arrivals, single-queue load balancing (optimal for mean response time, §5.1),
+background *network-shuffle* load that transiently inflates the service time
+of randomly chosen instance pairs (§5.1 "Background traffic"), and 100k-query
+runs reporting median / p99 / p99.9.
+
+Strategies (all use the same total instance count m + m/k for apples-to-apples
+comparisons, §5.1 "Baselines"):
+  * ``parm``            — m deployed + m/k parity instances; coding groups of
+                          k consecutive dispatches; a query completes at
+                          min(own prediction, reconstruction-ready time).
+  * ``equal_resources`` — m + m/k deployed instances, no redundancy.
+  * ``approx_backup``   — m deployed + m/k approximate models that receive a
+                          *replica of every query* (§5.2.6); backup service
+                          time = deployed / speedup.
+  * ``replication``     — every query sent to 2 of m instances (2x resources;
+                          for the resource-overhead comparison).
+  * ``none``            — m instances only (used to find the queueing knee).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class SimConfig:
+    m: int = 12                     # deployed-model instances
+    k: int = 2                      # coding-group size (redundancy 1/k)
+    qps: float = 270.0
+    n_queries: int = 100_000
+    service_ms: float = 25.0        # mean inference time (ResNet-18 on K80)
+    service_cv: float = 0.05        # coefficient of variation (lognormal)
+    # background load: concurrent network shuffles, each congesting the
+    # link of one randomly chosen instance for its duration; queries served
+    # by a congested instance incur an additional transfer delay
+    n_shuffles: int = 4
+    shuffle_ms: tuple = (300.0, 700.0)   # duration ~ U[a, b]
+    shuffle_gap_ms: tuple = (800.0, 2400.0)  # idle gap between shuffles
+    shuffle_delay_ms: tuple = (10.0, 40.0)   # added per-query delay when slow
+    shuffle_slowdown: float = 1.0        # optional multiplicative part
+    encode_ms: float = 0.153        # paper §5.2.5 (k=3 median), in ms
+    decode_ms: float = 0.014
+    approx_speedup: float = 1.15    # §5.2.6, GPU cluster value
+    batch_size: int = 1             # §5.2.3; batched service is sublinear
+    batch_cost: float = 0.2         # service(b) = service * (1 + cost*(b-1));
+                                    # GPUs batch well (paper scaled qps by the
+                                    # observed throughput gain)
+    seed: int = 0
+
+
+@dataclass(order=True)
+class _Event:
+    t: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: object = field(compare=False, default=None)
+
+
+class _Pool:
+    """Single-queue pool of n servers with per-server slowdown windows."""
+
+    def __init__(self, n, rng, cfg, mean_ms):
+        self.n = n
+        self.free = list(range(n))
+        self.queue = []
+        self.rng = rng
+        self.cfg = cfg
+        self.mean = mean_ms
+        self.slow_until = np.zeros(n)
+        self.sigma = math.sqrt(math.log(1 + cfg.service_cv ** 2))
+        self.mu = math.log(mean_ms) - self.sigma ** 2 / 2
+
+    def service_time(self, server, now):
+        base = self.rng.lognormal(self.mu, self.sigma)
+        b = self.cfg.batch_size
+        if b > 1:
+            base *= 1.0 + self.cfg.batch_cost * (b - 1)
+        if now < self.slow_until[server]:
+            base = base * self.cfg.shuffle_slowdown + \
+                self.rng.uniform(*self.cfg.shuffle_delay_ms)
+        return base
+
+    def submit(self, item):
+        self.queue.append(item)
+
+    def try_dispatch(self, now):
+        """Returns list of (server, item, finish_time)."""
+        out = []
+        while self.free and self.queue:
+            s = self.free.pop()
+            item = self.queue.pop(0)
+            out.append((s, item, now + self.service_time(s, now)))
+        return out
+
+
+def simulate(cfg: SimConfig, strategy: str = "parm"):
+    """Returns dict with latency percentiles and bookkeeping."""
+    rng = np.random.default_rng(cfg.seed)
+    k = cfg.k
+    n_redundant = cfg.m // k
+    if strategy == "parm":
+        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms),
+                 "parity": _Pool(n_redundant, rng, cfg, cfg.service_ms)}
+    elif strategy == "equal_resources":
+        pools = {"main": _Pool(cfg.m + n_redundant, rng, cfg, cfg.service_ms)}
+    elif strategy == "approx_backup":
+        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms),
+                 "backup": _Pool(n_redundant, rng, cfg,
+                                 cfg.service_ms / cfg.approx_speedup)}
+    elif strategy == "replication":
+        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms)}
+    elif strategy == "none":
+        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms)}
+    else:
+        raise ValueError(strategy)
+
+    # pre-draw arrivals
+    arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, cfg.n_queries))
+    latency = np.full(cfg.n_queries, np.inf)
+    arrival_t = arrivals.copy()
+    done = np.zeros(cfg.n_queries, bool)
+    reconstructed = 0
+
+    # ParM group bookkeeping
+    group_of = np.arange(cfg.n_queries) // k
+    n_groups = (cfg.n_queries + k - 1) // k
+    group_remaining = np.full(n_groups, k)          # member preds outstanding
+    group_members_done_t = np.zeros(n_groups)       # last member finish
+    group_second_last_t = np.full(n_groups, np.nan)
+    group_parity_t = np.full(n_groups, np.inf)      # parity output ready
+    group_member_t = np.full((n_groups, k), np.inf)
+
+    events = []
+    seq = 0
+
+    def push(t, kind, payload):
+        nonlocal seq
+        heapq.heappush(events, _Event(t, seq, kind, payload))
+        seq += 1
+
+    for i, t in enumerate(arrivals):
+        push(t, "arrive", i)
+
+    # background shuffles: a recurring process that slows random instances
+    all_pools = list(pools.values())
+
+    end_of_arrivals = arrivals[-1]
+
+    def schedule_shuffle(t0):
+        if t0 > end_of_arrivals:          # stop background load after arrivals
+            return
+        dur = rng.uniform(*cfg.shuffle_ms)
+        pool = all_pools[rng.integers(len(all_pools))]
+        srv = rng.integers(pool.n)
+        pool.slow_until[srv] = max(pool.slow_until[srv], t0 + dur)
+        # next shuffle of this "tenant" after an idle gap
+        push(t0 + dur + rng.uniform(*cfg.shuffle_gap_ms), "shuffle", None)
+
+    for j in range(cfg.n_shuffles):
+        schedule_shuffle(rng.uniform(0, 50.0))
+
+    def dispatch(pool_name, now):
+        pool = pools[pool_name]
+        for s, item, fin in pool.try_dispatch(now):
+            push(fin, "finish", (pool_name, s, item))
+
+    def complete(qi, t):
+        if not done[qi]:
+            done[qi] = True
+            latency[qi] = t - arrival_t[qi]
+
+    def maybe_reconstruct(g, t):
+        """When parity + (k-1) members are in, the straggler's prediction can
+        be decoded; all group members are then completable."""
+        mt = np.sort(group_member_t[g])
+        if not np.isfinite(group_parity_t[g]) or not np.isfinite(mt[-2]):
+            return
+        ready = max(group_parity_t[g], mt[-2]) + cfg.decode_ms
+        base = g * k
+        for j in range(k):
+            qi = base + j
+            if qi < cfg.n_queries and not done[qi]:
+                complete(qi, max(ready, arrival_t[qi]))
+                nonlocal_counter[0] += 1
+
+    nonlocal_counter = [0]
+
+    while events:
+        ev = heapq.heappop(events)
+        t = ev.t
+        if ev.kind == "arrive":
+            qi = ev.payload
+            if strategy == "parm":
+                pools["main"].submit(("q", qi))
+                dispatch("main", t)
+                g = group_of[qi]
+                if (qi % k == k - 1) or qi == cfg.n_queries - 1:
+                    # group complete -> encode + dispatch parity query
+                    pools["parity"].submit(("p", g))
+                    # encoding happens on the frontend; model the cost as
+                    # added latency on the parity path
+                    dispatch("parity", t + cfg.encode_ms)
+            elif strategy == "approx_backup":
+                pools["main"].submit(("q", qi))
+                pools["backup"].submit(("q", qi))
+                dispatch("main", t)
+                dispatch("backup", t)
+            elif strategy == "replication":
+                pools["main"].submit(("q", qi))
+                pools["main"].submit(("q", qi))
+                dispatch("main", t)
+            else:
+                pools["main"].submit(("q", qi))
+                dispatch("main", t)
+        elif ev.kind == "finish":
+            pool_name, s, item = ev.payload
+            pools[pool_name].free.append(s)
+            kind, idx = item
+            if kind == "q":
+                complete(idx, t)
+                if strategy == "parm":
+                    g = group_of[idx]
+                    group_member_t[g, idx - g * k] = min(
+                        group_member_t[g, idx - g * k], t)
+                    maybe_reconstruct(g, t)
+            else:  # parity output
+                group_parity_t[idx] = min(group_parity_t[idx], t)
+                maybe_reconstruct(idx, t)
+            dispatch(pool_name, t)
+        elif ev.kind == "shuffle":
+            schedule_shuffle(t)
+
+    lat = latency[np.isfinite(latency)]
+    assert len(lat) == cfg.n_queries, f"unanswered queries: {cfg.n_queries - len(lat)}"
+    return {
+        "strategy": strategy,
+        "median_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "p999_ms": float(np.percentile(lat, 99.9)),
+        "mean_ms": float(lat.mean()),
+        "max_ms": float(lat.max()),
+        "reconstructions": int(nonlocal_counter[0]),
+    }

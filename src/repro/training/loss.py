@@ -1,0 +1,29 @@
+"""Loss functions: next-token cross-entropy for LM training and the paper's
+parity-distillation MSE (§3.3 / §4.1 — MSE keeps ParM task-agnostic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits [..., V] float32; labels [...] int. Mean over valid tokens."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def lm_loss(logits, tokens, aux=0.0, aux_coef=0.01):
+    """Shifted next-token loss; ``aux`` is the MoE load-balance term."""
+    return (softmax_xent(logits[:, :-1], tokens[:, 1:])
+            + aux_coef * aux)
+
+
+def parity_mse(parity_out, target_sum):
+    """Paper §4.1: MSE between the parity model's output and the desired
+    linear combination of deployed-model outputs."""
+    d = (parity_out.astype(jnp.float32) - target_sum.astype(jnp.float32))
+    return jnp.mean(d * d)

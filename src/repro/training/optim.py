@@ -1,0 +1,74 @@
+"""Optimizers from scratch (no optax dependency).
+
+Adam/AdamW with configurable moment dtype: moments shard like the parameters
+(see repro.distributed.sharding) and can be stored in bf16 so the >=100B-param
+architectures fit 16 GB/chip HBM during the train_4k dry-run — the tradeoff is
+recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0            # AdamW when > 0
+    moment_dtype: str = "float32"
+    grad_clip: float = 0.0               # global-norm clip; 0 = off
+
+
+def adam_init(params, cfg: AdamConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adam_update(grads, state, params, cfg: AdamConfig):
+    step = state["step"] + 1
+    if cfg.grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g32 * g32 * (1 - cfg.b2)
+        mhat = m32 / (1 - cfg.b1 ** step)
+        vhat = v32 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    # flatten to avoid treating structural tuples in the param tree as leaves
+    g_flat, tdef = jax.tree.flatten(grads)
+    m_flat = jax.tree.leaves(state["mu"])
+    v_flat = jax.tree.leaves(state["nu"])
+    p_flat = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(g_flat, m_flat, v_flat, p_flat)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}
+
+
+def sgd_update(grads, params, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

@@ -1,0 +1,69 @@
+"""Train-step builders for the LM substrate (used by examples, smoke tests
+and the train_4k dry-run)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.training.loss import lm_loss, parity_mse
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+
+def make_train_step(cfg, opt_cfg: AdamConfig, remat=True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``batch`` = {"tokens": [B, S] int32} plus, per family,
+    "cross_embeds": [B, n_modality_tokens, D] (vlm) or
+    "frames": [B, S_src, D] (audio enc-dec).
+    """
+
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["cross_embeds"] = batch["cross_embeds"]
+        if cfg.enc_dec:
+            kw["cross_embeds"] = batch["frames"]
+        logits, aux = T.forward(cfg, params, tokens=batch["tokens"],
+                                remat=remat, **kw)
+        return lm_loss(logits, batch["tokens"], aux, cfg.router_aux_coef)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_parity_train_step(cfg, opt_cfg: AdamConfig, coeffs=None, remat=False):
+    """Parity-model training step for LM serving (paper §3.3 adapted to
+    embedding-space queries, DESIGN.md §3).
+
+    batch = {"embeds": [k, B, S, D] member-query embeddings,
+             "teacher": [k, B, S, V] deployed-model logits}
+    The parity model learns F_P(sum_i c_i emb_i) ~= sum_i c_i F(X_i).
+    """
+
+    def loss_fn(params, batch):
+        k = batch["embeds"].shape[0]
+        c = (jnp.ones((k,)) if coeffs is None else jnp.asarray(coeffs))
+        parity_q = jnp.einsum("k,kbsd->bsd", c.astype(batch["embeds"].dtype),
+                              batch["embeds"])
+        target = jnp.einsum("k,kbsv->bsv", c, batch["teacher"])
+        out, aux = T.forward(cfg, params, embeds=parity_q, remat=remat)
+        return parity_mse(out, target) + cfg.router_aux_coef * aux
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def init_train_state(cfg, key, opt_cfg: AdamConfig):
+    params = T.init_params(cfg, key)
+    return params, adam_init(params, opt_cfg)

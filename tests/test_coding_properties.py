@@ -1,0 +1,99 @@
+"""Property tests for the ParM coding layer (hypothesis).
+
+Invariants from the paper:
+  * For a linear deployed model F and the identity parity model F_P = F, the
+    addition/subtraction code is EXACT for any missing index (Table 1).
+  * For r > 1, with ideal parity outputs (the decoder's expected linear
+    combinations), any <= r missing outputs are reconstructed exactly from
+    any k available outputs (§3.5, MDS property of the Vandermonde code).
+  * Encoders preserve query shape; ConcatEncoder output equals one query's
+    footprint (1/k bandwidth overhead, §3.1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codes import (ConcatEncoder, LinearDecoder, SumEncoder,
+                              make_code, vandermonde)
+from repro.models.linear import init_linear, linear_fwd
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(k=st.integers(2, 6), missing=st.data(), seed=st.integers(0, 2**16))
+def test_linear_model_exact_reconstruction(k, missing, seed):
+    j = missing.draw(st.integers(0, k - 1))
+    key = jax.random.PRNGKey(seed)
+    p = init_linear(key, 12, 7)
+    xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, 3, 12))
+    enc, dec = make_code(k, 1, "sum")
+    parity = enc(xs)[0]
+    outs = jnp.stack([linear_fwd(p, x) for x in xs])         # [k, 3, 7]
+    parity_out = linear_fwd(p, parity)                        # ideal F_P = F
+    recon = dec.decode_one(parity_out, outs, j)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(outs[j]),
+                               rtol=0, atol=1e-3)
+
+
+@given(k=st.integers(2, 5), r=st.integers(1, 3), seed=st.integers(0, 2**16),
+       data=st.data())
+def test_vandermonde_multi_failure_exact(k, r, seed, data):
+    n_missing = data.draw(st.integers(1, r))
+    missing = data.draw(st.permutations(list(range(k))))[:n_missing]
+    rng = np.random.default_rng(seed)
+    outs_true = rng.normal(size=(k, 5)).astype(np.float32)
+    C = vandermonde(k, r)
+    parity_outs = (C @ outs_true).astype(np.float32)          # ideal F_P_j
+    dec = LinearDecoder(k, r)
+    mask = np.zeros(k, bool)
+    mask[list(missing)] = True
+    outs_in = outs_true.copy()
+    outs_in[mask] = 999.0                                     # garbage
+    recon = np.asarray(dec.decode(jnp.asarray(parity_outs),
+                                  jnp.asarray(outs_in), jnp.asarray(mask)))
+    np.testing.assert_allclose(recon[mask], outs_true[mask], atol=5e-3)
+    np.testing.assert_allclose(recon[~mask], outs_true[~mask], atol=1e-6)
+
+
+@given(k=st.integers(2, 5), r=st.integers(1, 3))
+def test_vandermonde_is_mds(k, r):
+    """Every square system the decoder can face must be solvable: any
+    m <= min(r, k) columns of the r x k coefficient matrix have rank m."""
+    from itertools import combinations
+    C = vandermonde(k, r)
+    m = min(r, k)
+    for cols in combinations(range(k), m):
+        sub = C[:, cols]
+        assert np.linalg.matrix_rank(sub) == m
+
+
+@given(k=st.sampled_from([2, 4]), seed=st.integers(0, 100))
+def test_concat_encoder_footprint(k, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(k, 3, 32, 32, 3)).astype(np.float32))
+    enc = ConcatEncoder(k)
+    out = enc(q)
+    assert out.shape == (1, 3, 32, 32, 3)     # same footprint as one query
+
+
+def test_sum_encoder_r1_is_plain_sum():
+    q = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+    enc = SumEncoder(2, 1)
+    np.testing.assert_allclose(np.asarray(enc(q)[0]), np.asarray(q.sum(0)))
+
+
+def test_decode_one_matches_general_decode():
+    k, r = 3, 1
+    rng = np.random.default_rng(0)
+    outs = jnp.asarray(rng.normal(size=(k, 4)).astype(np.float32))
+    parity = outs.sum(0)
+    dec = LinearDecoder(k, r)
+    for j in range(k):
+        a = dec.decode_one(parity, outs, j)
+        mask = np.zeros(k, bool)
+        mask[j] = True
+        b = dec.decode(parity[None], outs, jnp.asarray(mask))[j]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,145 @@
+"""Distribution-layer tests: sharding rules, logical constraints, roofline
+parsing, and a small-mesh dry-run in a subprocess (XLA device-count flags
+must be set before jax initialises, so it cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_specs_divisibility():
+    """Every generated PartitionSpec evenly divides its dim (by construction
+    of the divisibility guard)."""
+    from repro.configs.base import ARCH_IDS, get_config
+    from repro.launch.steps import param_shapes
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    from repro.distributed.sharding import ShardingRules
+    rules = ShardingRules.__new__(ShardingRules)
+    rules.mesh = FakeMesh()
+    rules.axis_sizes = {"data": 16, "model": 16}
+    rules.tp, rules.fsdp = "model", "data"
+    rules.batch_axes = ("data",)
+
+    sizes = {"data": 16, "model": 16}
+    from jax.tree_util import tree_flatten_with_path
+    for arch in ARCH_IDS:
+        shapes = param_shapes(get_config(arch))
+        leaves, _ = tree_flatten_with_path(shapes)
+        for path, leaf in leaves:
+            spec = rules.param_spec(path, leaf)
+            for dim, entry in zip(leaf.shape, spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                prod = 1
+                for a in axes:
+                    prod *= sizes[a]
+                assert dim % prod == 0, (arch, path, leaf.shape, spec)
+
+
+def test_logical_constrain_noop_without_rules():
+    from repro.distributed.logical import clear_rules, constrain
+    clear_rules()
+    x = jnp.ones((4, 8))
+    y = constrain(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_logical_axis_reuse_guard():
+    """The same mesh axis must never appear twice in one spec."""
+    from repro.distributed import logical
+
+    captured = {}
+    orig = jax.lax.with_sharding_constraint
+
+    def fake_wsc(x, spec):
+        captured["spec"] = spec
+        return x
+
+    jax.lax.with_sharding_constraint, wsc = fake_wsc, orig
+    try:
+        with logical.logical_rules(
+                {"batch": ("data",), "seq": ("data",)}, {"data": 16}):
+            logical.constrain(jnp.ones((16, 32)), ("batch", "seq"))
+        spec = captured["spec"]
+        flat = [a for e in spec if e for a in
+                (e if isinstance(e, tuple) else (e,))]
+        assert len(flat) == len(set(flat))
+        assert spec[0] == "data" and spec[1] is None
+    finally:
+        jax.lax.with_sharding_constraint = wsc
+
+
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+      %ag = bf16[16,128]{1,0} all-gather(bf16[2,128]{1,0} %x), dims={0}
+      %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%sum
+      %a2a = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-to-all(%p, %q)
+      %cp = u32[2]{0} collective-permute(u32[2]{0} %z)
+      %not_a_collective = f32[999999]{0} add(f32[1]{0} %a, f32[1]{0} %b)
+    """
+    detail, counts = collective_bytes(hlo)
+    assert detail["all-gather"] == 16 * 128 * 2
+    assert detail["all-reduce"] == 1024 * 4
+    assert detail["all-to-all"] == 2 * 4 * 8 * 2
+    assert detail["collective-permute"] == 2 * 4
+    assert counts["all-gather"] == 1
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import Roofline, PEAK_FLOPS, HBM_BW
+    r = Roofline(PEAK_FLOPS, HBM_BW * 2, 0.0, {}, {}, 256)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert r.dominant == "memory"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-135m", "train_4k"),
+    ("mamba2-780m", "decode_32k"),
+])
+def test_dryrun_subprocess_small_mesh(arch, shape):
+    """Lower+compile on the 2x2 test mesh in a fresh process."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "test", "--out",
+         "/tmp/dryrun_test_out"],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    path = f"/tmp/dryrun_test_out/{arch}__{shape}__test.json"
+    with open(path) as f:
+        res = json.load(f)
+    assert res["roofline"]["flops_per_device"] > 0
+    assert res["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_input_specs_all_pairs_shape_only():
+    """input_specs/cache_shapes build for all 40 pairs without allocation."""
+    from repro.configs.base import ARCH_IDS, SHAPES, get_config
+    from repro.launch.dryrun import adapt_config
+    from repro.launch import steps as ST
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cfg, _ = adapt_config(arch, shape)
+            batch = ST.input_specs(cfg, shape)
+            assert all(isinstance(v, jax.ShapeDtypeStruct)
+                       for v in batch.values())
+            if SHAPES[shape].kind == "decode":
+                cs = ST.cache_shapes(cfg, shape)
+                n_bytes = sum(np.prod(l.shape) * l.dtype.itemsize
+                              for l in jax.tree.leaves(cs))
+                assert n_bytes > 0

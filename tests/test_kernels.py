@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles in
+repro.kernels.ref (interpret mode on CPU; identical math on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("k,B,F,dt", [
+    (2, 4, 512, jnp.float32),
+    (3, 1, 128, jnp.float32),
+    (4, 8, 1000, jnp.bfloat16),
+    (6, 2, 257, jnp.float32),
+])
+def test_parity_encode(k, B, F, dt):
+    key = jax.random.PRNGKey(k * 31 + B)
+    q = jax.random.normal(key, (k, B, F), dt)
+    c = jnp.arange(1.0, k + 1.0)
+    got = ops.parity_encode_op(q, c)
+    want = ref.parity_encode_ref(q, c)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dt), rtol=_tol(dt))
+
+
+@pytest.mark.parametrize("k,B,V,dt", [
+    (2, 4, 100, jnp.float32),
+    (4, 2, 1000, jnp.float32),
+    (3, 8, 513, jnp.bfloat16),
+])
+def test_parity_decode(k, B, V, dt):
+    key = jax.random.PRNGKey(7)
+    outs = jax.random.normal(key, (k, B, V), dt)
+    par = jax.random.normal(jax.random.PRNGKey(8), (B, V), dt)
+    c = jnp.arange(1.0, k + 1.0)
+    for j in range(k):
+        got = ops.parity_decode_op(par, outs, j, coeffs=c)
+        avail = jnp.asarray(np.array(c) * (np.arange(k) != j))
+        want = ref.parity_decode_ref(par, outs, avail, 1.0 / float(c[j]))
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=_tol(dt) * k, rtol=2e-2)
+
+
+@pytest.mark.parametrize("B,Sq,H,KV,hd,causal,window,dt", [
+    (2, 128, 4, 2, 64, True, 0, jnp.float32),
+    (1, 256, 4, 4, 64, True, 64, jnp.float32),
+    (2, 100, 2, 1, 32, False, 0, jnp.float32),
+    (1, 128, 8, 2, 128, True, 0, jnp.bfloat16),
+])
+def test_flash_attention(B, Sq, H, KV, hd, causal, window, dt):
+    ks = jax.random.split(jax.random.PRNGKey(B * 7 + Sq), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dt)
+    k = jax.random.normal(ks[1], (B, Sq, KV, hd), dt)
+    v = jax.random.normal(ks[2], (B, Sq, KV, hd), dt)
+    got = ops.flash_attention_op(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2 if dt == jnp.bfloat16 else 2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,pos,dt", [
+    (2, 512, 4, 2, 64, 100, jnp.float32),
+    (1, 1024, 8, 1, 32, 1023, jnp.float32),
+    (3, 256, 2, 2, 64, 0, jnp.float32),
+    (2, 384, 4, 4, 128, 200, jnp.bfloat16),
+])
+def test_decode_attention(B, S, H, KV, hd, pos, dt):
+    ks = jax.random.split(jax.random.PRNGKey(S + pos), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dt)
+    kc = jax.random.normal(ks[1], (B, S, KV, hd), dt)
+    vc = jax.random.normal(ks[2], (B, S, KV, hd), dt)
+    got = ops.decode_attention_op(q, kc, vc, pos)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2 if dt == jnp.bfloat16 else 2e-5)
+
+
+def test_flash_attention_matches_model_layer():
+    """The XLA fallback in repro.models.layers and the Pallas kernel agree."""
+    from repro.models.layers import flash_attention_xla
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, KV, hd = 2, 96, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    a = ops.flash_attention_op(q, k, v, causal=True)
+    b = flash_attention_xla(q, k, v, causal=True, block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

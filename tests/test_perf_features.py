@@ -1,0 +1,182 @@
+"""Tests for the §Perf features: microbatched accumulation equivalence,
+coded-serve-step variants, and the inference sharding layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.training.optim import AdamConfig, adam_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_microbatch_matches_full_batch():
+    """m-way gradient accumulation == single-shot step (same data)."""
+    cfg = get_config("smollm-135m", reduced=True)
+    params = T.init_params(cfg, KEY)
+    opt = AdamConfig(lr=1e-2)
+    batch = {"tokens": jax.random.randint(KEY, (4, 16), 0, cfg.vocab)}
+
+    s1 = ST.make_train_step(cfg, opt, shard_logits=False)
+    s2 = ST.make_train_step(cfg, opt, shard_logits=False, microbatch=2)
+    p1, _, l1 = jax.jit(s1)(params, adam_init(params, opt), batch)
+    p2, _, l2 = jax.jit(s2)(params, adam_init(params, opt), batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-3)
+
+
+def test_coded_serve_optimized_matches_baseline():
+    """Fused-gather + last-token-unembed variant returns the same parity
+    output the decoder consumes."""
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = T.init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 3, 16), 0, cfg.vocab)}
+    base = ST.make_coded_serve_step(cfg, k=2, optimized=False)
+    opt = ST.make_coded_serve_step(cfg, k=2, optimized=True)
+    lb, _ = jax.jit(base)(params, batch)
+    lo, _ = jax.jit(opt)(params, batch)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(lo), atol=2e-3)
+
+
+def test_coded_serve_equals_decoder_identity_for_linear_regime():
+    """Embedding-space ParM sanity: summing member embeddings and running the
+    *deployed* model approximates sum of logits only after training — but the
+    encode itself must be exactly linear: embeds(parity tokens stream) ==
+    sum of member embeds."""
+    cfg = get_config("smollm-135m", reduced=True)
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 3, 8), 0, cfg.vocab)
+    a = jax.vmap(lambda t: T.embed_tokens(cfg, params, t))(toks).sum(0)
+    flat = T.embed_tokens(cfg, params, toks.reshape(6, 8))
+    b = flat.reshape(2, 3, 8, -1).sum(0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_inference_sharding_rules_drop_fsdp():
+    from repro.distributed.sharding import ShardingRules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((4, 4))
+
+    for fsdp, want in [(True, "data"), (False, None)]:
+        r = ShardingRules.__new__(ShardingRules)
+        r.mesh = FakeMesh()
+        r.axis_sizes = {"data": 4, "model": 4}
+        r.tp = "model"
+        r.fsdp = "data" if fsdp else None
+        r.fsdp_params = fsdp
+        r.batch_axes = ("data",)
+        spec = r.param_spec(
+            ((jax.tree_util.DictKey("wq"),)),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32))
+        assert spec[0] == want, (fsdp, spec)
+
+
+def test_unembed_last_only():
+    cfg = get_config("olmo-1b", reduced=True)
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    full, _ = T.forward(cfg, params, tokens=toks)
+    last, _ = T.forward(cfg, params, tokens=toks, unembed_last_only=True)
+    assert last.shape == (2, 1, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_frontend_with_pallas_kernel_codecs():
+    """The threaded frontend can run encode/decode through the Pallas kernel
+    wrappers (interpret mode on CPU) instead of plain jnp."""
+    from repro.kernels import ops
+    from repro.serving.runtime import ParMFrontend
+
+    W = jnp.asarray(np.random.default_rng(0).normal(size=(8, 5)),
+                    jnp.float32)
+
+    def fwd(p, x):
+        return x @ p
+
+    def encode_fn(queries):                    # [k, 1, 8]
+        c = jnp.ones((queries.shape[0],))
+        return np.asarray(ops.parity_encode_op(jnp.asarray(queries), c))[None]
+
+    def decode_fn(parity_out, outs, j):        # outs [k, 1, 5]
+        return np.asarray(ops.parity_decode_op(
+            jnp.asarray(parity_out), jnp.asarray(outs), j))
+
+    slow = {0}
+    fe = ParMFrontend(fwd, W, parity_params=W, k=2, m=2, mode="parm",
+                      delay_fn=lambda i: 0.4 if i in slow else 0.0,
+                      encode_fn=encode_fn, decode_fn=decode_fn)
+    try:
+        xs = [np.random.default_rng(i).normal(size=(1, 8)).astype(np.float32)
+              for i in range(4)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                       atol=1e-3)
+        assert any(q.completed_by == "parity" for q in qs)
+    finally:
+        fe.shutdown()
+
+
+def test_frontend_r2_two_concurrent_stragglers():
+    """Paper §3.5 in the runtime: with r=2 parity models, a coding group can
+    lose BOTH member predictions and still be reconstructed exactly for a
+    linear deployed model."""
+    from repro.serving.runtime import ParMFrontend
+
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+
+    def fwd(p, x):
+        return x @ p
+
+    # ideal parity models for a linear F: F itself scaled per Vandermonde row
+    # row0 = [1,1] -> F;  row1 = [1,2]: F_P1(x1 + 2 x2) = F(x1) + 2 F(x2) = F
+    parity_models = [W, W]
+
+    slow = {0, 1}                      # BOTH deployed instances straggle
+
+    def delay(iid):
+        # generous straggle: the first decode pays one-time jnp trace cost
+        return 2.5 if iid in slow else 0.0
+
+    fe = ParMFrontend(fwd, W, parity_params=parity_models, k=2, r=2, m=2,
+                      mode="parm", delay_fn=delay)
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        n_parity = sum(q.completed_by == "parity" for q in qs)
+        assert n_parity == 2, [q.completed_by for q in qs]
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                       atol=1e-2)
+    finally:
+        fe.shutdown()
+
+
+def test_decoder_partial_parity_availability():
+    """decode() with a straggling parity model: exact when
+    #available parities >= #missing."""
+    from repro.core.codes import LinearDecoder, vandermonde
+    rng = np.random.default_rng(1)
+    k, r = 3, 2
+    outs_true = rng.normal(size=(k, 4)).astype(np.float32)
+    C = vandermonde(k, r)
+    parity_outs = (C @ outs_true).astype(np.float32)
+    dec = LinearDecoder(k, r)
+    miss = np.array([True, False, False])
+    pa = np.array([False, True])       # parity 0 unavailable
+    got = np.asarray(dec.decode(jnp.asarray(parity_outs),
+                                jnp.asarray(np.where(miss[:, None], 99.0,
+                                                     outs_true)),
+                                jnp.asarray(miss), jnp.asarray(pa)))
+    np.testing.assert_allclose(got, outs_true, atol=1e-3)
