@@ -10,10 +10,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.codes import ConcatEncoder, make_code, vandermonde
+from repro.core.codes import vandermonde
 from repro.core.metrics import (degraded_accuracy, iou, overall_accuracy,
                                 topk_accuracy)
-from repro.core.parity import ParityTrainer, train_parity_models
+from repro.core.parity import train_parity_models
 from repro.data.pipeline import batched, cluster_images
 from repro.models.cnn import build
 from repro.training.loss import softmax_xent
@@ -45,12 +45,12 @@ def _train_deployed(noise, seed=0, kind="mlp", epochs=3, n=3000):
     return params, fwd, (x, y, xt, yt)
 
 
-def _eval_parm(params, fwd, data, k, encoder_kind="sum", epochs=5, seed=0):
+def _eval_parm(params, fwd, data, k, scheme="sum", epochs=5, seed=0):
     x, y, xt, yt = data
-    pp, enc, dec = train_parity_models(
+    pp, scheme = train_parity_models(
         params, fwd, lambda kk: build(
             "mlp", kk, image_shape=IMG, n_out=N_CLASSES)[0],
-        x, k=k, encoder_kind=encoder_kind, epochs=epochs, seed=seed)
+        x, k=k, scheme=scheme, epochs=epochs, seed=seed)
     a_a = topk_accuracy(np.asarray(fwd(params, jnp.asarray(xt))), yt)
     rng = np.random.default_rng(seed + 2)
     n = (len(xt) // k) * k
@@ -59,13 +59,9 @@ def _eval_parm(params, fwd, data, k, encoder_kind="sum", epochs=5, seed=0):
     glabels = yt[order].reshape(-1, k)
     member = np.asarray(fwd(params, jnp.asarray(
         groups.reshape(n, *IMG)))).reshape(-1, k, N_CLASSES)
-    if encoder_kind == "concat":
-        pq = np.asarray(enc(jnp.asarray(np.moveaxis(groups, 1, 0))))[0]
-    else:
-        C = vandermonde(k, 1)
-        pq = np.einsum("k,gk...->g...", C[0], groups)
+    pq = np.asarray(scheme.encode(jnp.asarray(np.moveaxis(groups, 1, 0))))[0]
     parity_out = np.asarray(fwd(pp[0], jnp.asarray(pq)))[:, None]
-    a_d = degraded_accuracy(parity_out, member, glabels, dec)
+    a_d = degraded_accuracy(parity_out, member, glabels, scheme)
     return a_a, a_d
 
 
@@ -103,7 +99,6 @@ def bench_fig7_overall_accuracy():
 def bench_fig8_localization():
     """Object localization (regression): predict a box around the bright
     blob; report mean IoU of deployed vs ParM-reconstructed predictions."""
-    rng = np.random.default_rng(0)
     n = 3000
     H = 16
 
@@ -141,7 +136,7 @@ def bench_fig8_localization():
     dep_iou = iou(np.asarray(fwd(params, jnp.asarray(xt))), bt).mean()
 
     k = 2
-    pp, enc, dec = train_parity_models(
+    pp, scheme = train_parity_models(
         params, fwd, lambda kk: build("mlp", kk, image_shape=(H, H, 1),
                                       n_out=4)[0],
         x, k=k, epochs=15, seed=0)
@@ -155,8 +150,8 @@ def bench_fig8_localization():
     recon_ious = []
     for j in range(k):
         rec = np.asarray(jax.vmap(
-            lambda po, mo: dec.decode_one(po, mo, j))(jnp.asarray(pout),
-                                                      jnp.asarray(member)))
+            lambda po, mo: scheme.decode_one(po, mo, j))(jnp.asarray(pout),
+                                                         jnp.asarray(member)))
         recon_ious.append(iou(rec, gb[:, j]).mean())
     print(f"fig8_deployed_mean_iou,{dep_iou:.3f},")
     print(f"fig8_parm_reconstructed_iou,{np.mean(recon_ious):.3f},"
@@ -173,9 +168,8 @@ def bench_fig9_vary_k():
 def bench_fig10_task_specific_encoder():
     params, fwd, data = _train_deployed(2.0)
     for k in (2, 4):
-        _, a_d_sum = _eval_parm(params, fwd, data, k=k, encoder_kind="sum")
-        _, a_d_cat = _eval_parm(params, fwd, data, k=k,
-                                encoder_kind="concat")
+        _, a_d_sum = _eval_parm(params, fwd, data, k=k, scheme="sum")
+        _, a_d_cat = _eval_parm(params, fwd, data, k=k, scheme="concat")
         print(f"fig10_k{k}_addition_Ad,{a_d_sum:.3f},")
         print(f"fig10_k{k}_concat_Ad,{a_d_cat:.3f},"
               "NOTE:synthetic_gaussian_task_is_near-linear_so_addition_wins;"
@@ -184,11 +178,10 @@ def bench_fig10_task_specific_encoder():
 
 def bench_r2_concurrent_failures():
     """§3.5: r=2 parity models tolerate two concurrent unavailabilities."""
-    from repro.core.codes import LinearDecoder
     params, fwd, data = _train_deployed(1.5)
     x, y, xt, yt = data
     k, r = 2, 2
-    pp, enc, dec = train_parity_models(
+    pp, scheme = train_parity_models(
         params, fwd, lambda kk: build("mlp", kk, image_shape=IMG,
                                       n_out=N_CLASSES)[0],
         x, k=k, r=r, epochs=5, seed=0)
@@ -206,8 +199,8 @@ def bench_r2_concurrent_failures():
     # both members missing -> decode from the two parity outputs alone
     mask = jnp.asarray(np.ones(k, bool))
     recon = np.asarray(jax.vmap(
-        lambda po, mo: dec.decode(po, mo, mask))(jnp.asarray(pouts),
-                                                 jnp.asarray(member * 0)))
+        lambda po, mo: scheme.decode(po, mo, mask))(jnp.asarray(pouts),
+                                                    jnp.asarray(member * 0)))
     hits = (np.argmax(recon, -1) == glabels).mean()
     print(f"r2_both_missing_Ad,{hits:.3f},default={1/N_CLASSES:.2f}")
 

@@ -18,15 +18,18 @@ def _time(fn, *args, iters=20):
 
 
 def bench_kernel_parity_ops():
-    from repro.kernels import ops
+    """The parity hot paths through the scheme API, both backends — jnp vs
+    the Pallas kernel wrappers (interpret mode here)."""
+    from repro.core.scheme import get_scheme
     k = 4
     q = jnp.ones((k, 8, 4096))
-    c = jnp.arange(1.0, k + 1.0)
-    us = _time(lambda x: ops.parity_encode_op(x, c), q)
-    print(f"kernel_parity_encode_us,{us:.0f},interpret_mode")
     outs = jnp.ones((k, 8, 1000))
-    us = _time(lambda o: ops.parity_decode_op(o[0], o, 1), outs)
-    print(f"kernel_parity_decode_us,{us:.0f},interpret_mode")
+    for backend in ("jnp", "pallas"):
+        scheme = get_scheme("sum", k=k, r=1, backend=backend)
+        us = _time(lambda x: scheme.encode(x), q)
+        print(f"kernel_parity_encode_{backend}_us,{us:.0f},interpret_mode")
+        us = _time(lambda o: scheme.decode_one(o[0], o, 1), outs)
+        print(f"kernel_parity_decode_{backend}_us,{us:.0f},interpret_mode")
 
 
 def bench_kernel_attention():

@@ -6,7 +6,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.serving.simulator import SimConfig, simulate
 
@@ -85,14 +84,14 @@ def bench_fig15_approx_backup():
 def bench_sec525_encode_decode_latency():
     """Encoder/decoder wall time on this container (paper: 93-193 us encode,
     8-19 us decode on a c5.9xlarge frontend)."""
-    from repro.core.codes import LinearDecoder, SumEncoder
+    from repro.core.scheme import get_scheme
     for k in (2, 3, 4):
-        enc, dec = SumEncoder(k, 1), LinearDecoder(k, 1)
+        scheme = get_scheme("sum", k=k, r=1)
         # Cat-v-Dog-scale query: 224x224x3 image
         q = jnp.ones((k, 1, 224, 224, 3))
         outs = jnp.ones((k, 1, 1000))                 # 1000-class predictions
-        e = jax.jit(lambda x: enc(x))
-        d = jax.jit(lambda p, o: dec.decode_one(p, o, 0))
+        e = jax.jit(lambda x: scheme.encode(x))
+        d = jax.jit(lambda p, o: scheme.decode_one(p, o, 0))
         e(q).block_until_ready()
         d(outs[0], outs).block_until_ready()
         for name, fn, args, iters in [("encode", e, (q,), 100),

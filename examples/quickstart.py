@@ -42,18 +42,18 @@ def main():
     acc = topk_accuracy(np.asarray(fwd(params, jnp.asarray(xt))), yt)
     print(f"deployed model accuracy A_a = {acc:.3f}")
 
-    # 2. parity model (k=2, addition code) ---------------------------------
+    # 2. parity model (k=2, the "sum" scheme from the registry) ------------
     k = 2
-    parity_params, encoder, decoder = train_parity_models(
+    parity_params, scheme = train_parity_models(
         params, fwd, lambda kk: build("mlp", kk, image_shape=IMG)[0],
-        x, k=k, epochs=5)
+        x, k=k, scheme="sum", epochs=5)
 
     # 3. one coding group: X1, X2 -> P; X2's prediction is "unavailable" ---
     x1, x2 = xt[0:1], xt[1:2]
-    parity_query = encoder(jnp.stack([x1, x2]))[0]
+    parity_query = scheme.encode(jnp.stack([x1, x2]))[0]
     f_x1 = fwd(params, jnp.asarray(x1))
     f_p = fwd(parity_params[0], parity_query)
-    recon = decoder.decode_one(f_p[0], jnp.stack([f_x1[0], f_x1[0] * 0]), 1)
+    recon = scheme.decode_one(f_p[0], jnp.stack([f_x1[0], f_x1[0] * 0]), 1)
     truth = fwd(params, jnp.asarray(x2))[0]
     print(f"true class of X2:           {int(jnp.argmax(truth))} "
           f"(label {yt[1]})")

@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.parity import train_parity_models
@@ -49,7 +48,7 @@ def main():
 
     for xb, yb in batched(x, y, 64, epochs=3):
         params, state, _ = step(params, state, xb, yb)
-    pp, enc, dec = train_parity_models(
+    pp, scheme = train_parity_models(
         params, fwd, lambda kk: build("mlp", kk, image_shape=IMG)[0],
         x, k=args.k, epochs=5)
     jfwd = jax.jit(fwd)
@@ -61,7 +60,7 @@ def main():
         return args.straggle_ms / 1e3 if iid in slow else 0.0
 
     fe = ParMFrontend(jfwd, params, parity_params=pp[0], k=args.k, m=args.m,
-                      mode="parm", delay_fn=delay)
+                      strategy="parm", scheme=scheme, delay_fn=delay)
     try:
         t0 = time.perf_counter()
         qs = []

@@ -1,5 +1,5 @@
 """Train a parity model for an assigned LM architecture (embedding-space
-ParM, DESIGN.md §3) and measure degraded-mode next-token agreement.
+ParM, DESIGN.md §2) and measure degraded-mode next-token agreement.
 
     PYTHONPATH=src python examples/train_parity_lm.py [--arch smollm-135m]
 

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import importlib
 from dataclasses import dataclass
-from typing import Optional
 
 
 @dataclass(frozen=True)

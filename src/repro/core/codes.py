@@ -22,7 +22,6 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -70,6 +69,11 @@ class ConcatEncoder:
         assert self.r == 1
         k, B, H, W, C = queries.shape
         g = math.ceil(math.sqrt(k))
+        if H % g != 0 or W % g != 0:
+            raise ValueError(
+                f"ConcatEncoder with k={k} tiles a {g}x{g} grid, so image "
+                f"height and width must be divisible by {g}; got H={H}, "
+                f"W={W}. Pad or resize the queries first.")
         h, w = H // g, W // g
         # average-pool each query down to (h, w)
         q = queries.reshape(k * B, g, h, g, w, C).mean(axis=(1, 3))
@@ -140,6 +144,18 @@ class LinearDecoder:
 
 
 def make_code(k, r=1, kind="sum"):
+    """Deprecated: resolve codes through the scheme registry instead ::
+
+        from repro.core.scheme import get_scheme
+        scheme = get_scheme("sum", k=k, r=r)
+
+    Kept as a shim for old call sites; returns the legacy
+    ``(encoder, decoder)`` pair."""
+    import warnings
+    warnings.warn(
+        "make_code() is deprecated; use repro.core.scheme.get_scheme() — "
+        "schemes carry encode/decode/coeffs on one object and support "
+        "backend selection", DeprecationWarning, stacklevel=2)
     if kind == "sum":
         return SumEncoder(k, r), LinearDecoder(k, r)
     if kind == "concat":

@@ -15,15 +15,19 @@ labels — both modes are supported below.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codes import SumEncoder, ConcatEncoder, LinearDecoder
+from repro.core.scheme import LinearScheme, ReplicationScheme, get_scheme
 from repro.training.loss import parity_mse
+
+# schemes whose (un-overridden) encode is exactly the coeffs product, so the
+# per-row training set can be built with one einsum instead of a full encode
+_ROW_SEPARABLE_ENCODES = (LinearScheme.encode, ReplicationScheme.encode)
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
 
@@ -34,20 +38,25 @@ def group_queries(x, k, rng):
     return x[order].reshape(len(x) // k, k, *x.shape[1:]), order[:n]
 
 
-def make_parity_dataset(x, fx, k, encoder, coeff_row, rng):
-    """Returns (parity queries [G, ...], targets [G, ...]).
+def make_parity_dataset(x, fx, k, scheme, j, rng):
+    """Training set for the j-th parity model: parity queries are the
+    scheme's j-th encoded row, targets the j-th coefficient-row combination
+    of deployed outputs.
 
-    x: queries [n, ...]; fx: deployed outputs F(x) [n, V]."""
+    x: queries [n, ...]; fx: deployed outputs F(x) [n, V].
+    Returns (parity queries [G, ...], targets [G, ...])."""
     groups, order = group_queries(x, k, rng)
     fx_groups = fx[order].reshape(groups.shape[0], k, *fx.shape[1:])
-    # encoder consumes [k, B, ...]
-    parities = encoder(np.moveaxis(groups, 1, 0))[  # [r, G, ...] -> row 0
-        0] if isinstance(encoder, ConcatEncoder) else None
-    if parities is None:
-        c = np.asarray(coeff_row, np.float32)
-        parities = np.einsum("k,gk...->g...", c, groups)
-    targets = np.einsum("k,gk...->g...", np.asarray(coeff_row, np.float32),
-                        fx_groups)
+    coeff_row = np.asarray(scheme.coeffs, np.float32)[j]
+    if type(scheme).encode in _ROW_SEPARABLE_ENCODES:
+        # un-overridden linear encode: compute only row j instead of encoding
+        # all r rows over the full training set and keeping one
+        parities = np.einsum("k,gk...->g...", coeff_row, groups)
+    else:
+        # custom encoders (concat, learned): the parity model must train on
+        # exactly what the frontend will feed it — [k, G, ...] -> [r, G, ...]
+        parities = np.asarray(scheme.encode(np.moveaxis(groups, 1, 0)))[j]
+    targets = np.einsum("k,gk...->g...", coeff_row, fx_groups)
     return np.asarray(parities, np.float32), np.asarray(targets, np.float32)
 
 
@@ -86,26 +95,38 @@ class ParityTrainer:
         return params, losses
 
 
-def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=1,
-                        encoder_kind="sum", epochs=5, seed=0, batch=64,
-                        use_true_labels=False, labels=None, n_classes=None):
-    """End-to-end §3.3 pipeline. Returns (list of r parity params, encoder,
-    decoder)."""
-    from repro.core.codes import make_code, vandermonde
-    encoder, decoder = make_code(k, r, encoder_kind)
+def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=None,
+                        scheme="sum", epochs=5, seed=0, batch=64,
+                        use_true_labels=False, labels=None, n_classes=None,
+                        encoder_kind=None):
+    """End-to-end §3.3 pipeline: trains one parity model per parity row of
+    ``scheme`` (a ``CodingScheme`` instance or registered name; ``r`` defaults
+    to 1 for names and to the scheme's own r for instances — an explicit
+    mismatch raises).
+
+    Returns ``(list of scheme.r parity params, scheme)`` — the scheme object
+    carries ``encode`` / ``decode`` / ``decode_one`` / ``coeffs`` for serving.
+
+    ``encoder_kind=`` is a deprecated alias for ``scheme=``."""
+    if encoder_kind is not None:
+        warnings.warn(
+            "train_parity_models(encoder_kind=...) is deprecated; pass "
+            "scheme= (a registered name or CodingScheme instance)",
+            DeprecationWarning, stacklevel=2)
+        scheme = encoder_kind
+    scheme = get_scheme(scheme, k=k, r=r)
     fx = np.asarray(jax.jit(fwd)(deployed_params, jnp.asarray(x_train)))
     if use_true_labels:
         fx = np.eye(n_classes, dtype=np.float32)[labels] * 10.0  # scaled one-hot
-    C = vandermonde(k, r)
     rng = np.random.default_rng(seed)
     parity_params = []
-    for j in range(r):
-        pq, tg = make_parity_dataset(np.asarray(x_train), fx, k, encoder,
-                                     C[j], rng)
+    for j in range(scheme.r):
+        pq, tg = make_parity_dataset(np.asarray(x_train), fx, k, scheme,
+                                     j, rng)
         key = jax.random.PRNGKey(seed + 17 * j)
         pp = init_fn(key)
         trainer = ParityTrainer(fwd=fwd)
         pp, _ = trainer.train(pp, pq, tg, batch=batch, epochs=epochs,
                               seed=seed + j)
         parity_params.append(pp)
-    return parity_params, encoder, decoder
+    return parity_params, scheme

@@ -1,0 +1,332 @@
+"""Pluggable coding-scheme layer: the ``CodingScheme`` protocol + registry.
+
+ParM's central claim (paper §3.2-§3.5) is that the *code* is a swappable,
+simple component — the learning lives in the parity model.  This module makes
+that claim structural: every encoder/decoder pair is a ``CodingScheme`` with a
+uniform surface
+
+    scheme.encode(queries)                      # [k, ...] -> [r, ...]
+    scheme.decode(parity_outs, outputs, missing_mask, parity_avail=None)
+    scheme.decode_one(parity_out, outputs, missing_idx)   # r=1 hot path
+    scheme.coeffs                               # [r, k] combination matrix
+    scheme.k, scheme.r, scheme.name
+
+and both serving layers (``repro.serving.runtime`` and
+``repro.serving.simulator``) resolve schemes *only* through the registry:
+
+    register_scheme("myscheme", factory)        # one file, one call
+    get_scheme("myscheme", k=4, r=2, backend="pallas")
+
+Built-in entries:
+
+* ``sum``          — the paper's addition/Vandermonde code (§3.2, §3.5).
+* ``concat``       — the task-specific downsample-and-grid image code (§4.2.3).
+* ``replication``  — each query mirrored (r = k identity code); decode is a
+                     passthrough.  Registering it here is what lets
+                     replication run through the coded serving path instead of
+                     being a simulator-only special case.
+
+``backend="jnp" | "pallas"`` selects the implementation of the hot paths:
+``pallas`` routes encode / r=1-decode through the Pallas TPU kernels in
+``repro.kernels`` (interpret mode on CPU), ``jnp`` uses the pure-jnp
+reference.  The general r>1 least-squares decode always runs in jnp — it is a
+tiny [k, k] solve off the latency-critical path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codes import ConcatEncoder, vandermonde
+
+BACKENDS = ("jnp", "pallas")
+
+
+@runtime_checkable
+class CodingScheme(Protocol):
+    """Structural protocol every coding scheme satisfies (duck-typed; concrete
+    schemes need not inherit from anything)."""
+
+    k: int
+    r: int
+    name: str
+
+    @property
+    def coeffs(self): ...                                     # [r, k]
+
+    def encode(self, queries): ...                            # [k,...]->[r,...]
+
+    def decode(self, parity_outs, outputs, missing_mask,
+               parity_avail=None): ...
+
+    def decode_one(self, parity_out, outputs, missing_idx): ...
+
+
+def _check_backend(backend):
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+
+def _pallas_encode(queries, coeffs, r):
+    """Route encode through the Pallas kernel, one launch per parity row."""
+    from repro.kernels import ops
+    q = jnp.asarray(queries)
+    batched = q.ndim > 1
+    if not batched:                       # [k] -> [k, 1]
+        q = q[:, None]
+    if q.ndim == 2:                       # [k, F] -> [k, 1, F]
+        q = q[:, None, :]
+        out = jnp.stack([ops.parity_encode_op(q, coeffs[j])[0]
+                         for j in range(r)])
+    else:
+        out = jnp.stack([ops.parity_encode_op(q, coeffs[j])
+                         for j in range(r)])
+    return out if batched else out[:, 0]
+
+
+def _pallas_decode_one(parity_out, outputs, missing_idx, coeffs):
+    """Route the r=1 subtraction decode through the Pallas kernel."""
+    from repro.kernels import ops
+    outs = jnp.asarray(outputs)
+    po = jnp.asarray(parity_out)
+    k = outs.shape[0]
+    batched = outs.ndim > 2
+    flat = outs.reshape(k, 1, -1) if not batched else \
+        outs.reshape(k, outs.shape[1], -1)
+    pf = po.reshape(flat.shape[1:])
+    out = ops.parity_decode_op(pf, flat, missing_idx, coeffs=coeffs)
+    return out.reshape(po.shape)
+
+
+@dataclass(frozen=True)
+class LinearScheme:
+    """The paper's addition code, generalised to r >= 1 Vandermonde rows
+    (§3.5).  r=1 reduces to P = sum X_i with the subtraction decoder.
+
+    All decode math reads ``self.coeffs``, so subclasses that override the
+    coefficient matrix (or ``encode``) stay internally consistent."""
+
+    k: int
+    r: int = 1
+    backend: str = "jnp"
+    name: str = "sum"
+
+    def __post_init__(self):
+        _check_backend(self.backend)
+        # cache: coeffs sits on the non-jitted serving hot path (encode and
+        # decode run under the frontend lock) and the frozen dataclass can
+        # never change it
+        object.__setattr__(
+            self, "_coeffs",
+            jnp.asarray(vandermonde(self.k, self.r), jnp.float32))
+
+    @property
+    def coeffs(self):
+        return self._coeffs
+
+    def encode(self, queries):
+        """queries [k, ...] -> parities [r, ...]."""
+        queries = jnp.asarray(queries)
+        assert queries.shape[0] == self.k, queries.shape
+        if self.backend == "pallas":
+            return _pallas_encode(queries, self.coeffs, self.r)
+        c = self.coeffs.astype(queries.dtype)
+        return jnp.tensordot(c, queries, axes=1)
+
+    __call__ = encode
+
+    def decode_one(self, parity_out, outputs, missing_idx):
+        """r=1 subtraction path: F_hat(X_j) = (F_P(P) - sum_{i!=j} c_i F(X_i))
+        / c_j."""
+        if self.backend == "pallas":
+            return _pallas_decode_one(parity_out, outputs, missing_idx,
+                                      self.coeffs[0])
+        c = self.coeffs[0].astype(jnp.float32)          # [k]
+        outs = jnp.asarray(outputs).astype(jnp.float32)
+        mask = (jnp.arange(self.k) != missing_idx)
+        avail_sum = jnp.einsum("k,k...->...", c * mask, outs)
+        po = jnp.asarray(parity_out).astype(jnp.float32)
+        return (po - avail_sum) / c[missing_idx]
+
+    def decode(self, parity_outs, outputs, missing_mask, parity_avail=None):
+        """General masked least-squares decode (exact while #missing <=
+        #available parities; ``parity_avail`` [r] marks which parity outputs
+        arrived — a parity model can straggle too).  Always jnp — a [k, k]
+        solve off the hot path; jit-stable shapes for any missing pattern."""
+        C = self.coeffs                                  # [r, k]
+        parity_outs = jnp.asarray(parity_outs)
+        if parity_avail is not None:
+            pa = jnp.asarray(parity_avail).astype(jnp.float32)[:, None]
+            C = C * pa
+            parity_outs = parity_outs * pa.reshape(
+                (-1,) + (1,) * (parity_outs.ndim - 1))
+        outs = jnp.asarray(outputs).astype(jnp.float32)
+        missing_mask = jnp.asarray(missing_mask)
+        avail = (~missing_mask).astype(jnp.float32)
+        rhs = parity_outs.astype(jnp.float32) - jnp.einsum(
+            "rk,k...->r...", C * avail[None, :], outs)   # [r, ...]
+        # Solve C_miss @ y = rhs for the missing columns via normal equations
+        # restricted to missing columns: M = C * miss
+        M = C * missing_mask.astype(jnp.float32)[None, :]        # [r, k]
+        G = M.T @ M + 1e-9 * jnp.eye(self.k)                     # [k, k]
+        # y_missing = pinv: solve G y = M^T rhs
+        mt_rhs = jnp.einsum("rk,r...->k...", M, rhs)
+        flat = mt_rhs.reshape(self.k, -1)
+        sol = jnp.linalg.solve(G, flat).reshape(mt_rhs.shape)    # [k, ...]
+        mm = missing_mask.reshape((self.k,) + (1,) * (outs.ndim - 1))
+        return jnp.where(mm, sol, outs)
+
+
+@dataclass(frozen=True)
+class ConcatScheme(LinearScheme):
+    """§4.2.3 task-specific image code: encode downsamples k images into a
+    g x g grid (g = ceil(sqrt(k))), decode is the r=1 subtraction decoder over
+    model *outputs* (the output code is still addition)."""
+
+    name: str = "concat"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.r != 1:
+            raise ValueError(
+                f"concat scheme supports r=1 only, got r={self.r}")
+        object.__setattr__(self, "_encoder", ConcatEncoder(self.k, 1))
+
+    def encode(self, queries):
+        """queries [k, B, H, W, C] -> [1, B, H, W, C]."""
+        return self._encoder(jnp.asarray(queries))
+
+    __call__ = encode
+
+
+@dataclass(frozen=True)
+class ReplicationScheme:
+    """Replication expressed as a code: the coefficient matrix is I_k, so
+    "encoding" mirrors each query (r = k parity queries) and decode is a
+    passthrough — the j-th replica's output *is* the j-th reconstruction.
+
+    Plugging this into the coded serving path (parity models = the deployed
+    model) gives classic 2x replication through the exact same group/decode
+    machinery as ParM, which is the point of the registry."""
+
+    k: int
+    r: int = 0                    # always k; 0 placeholder fixed in post_init
+    backend: str = "jnp"
+    name: str = "replication"
+
+    def __post_init__(self):
+        _check_backend(self.backend)
+        if self.r not in (0, self.k):
+            raise ValueError(
+                f"replication scheme has r == k, got r={self.r} k={self.k}")
+        object.__setattr__(self, "r", self.k)
+        object.__setattr__(self, "_coeffs",
+                           jnp.eye(self.k, dtype=jnp.float32))
+
+    @property
+    def coeffs(self):
+        return self._coeffs
+
+    def encode(self, queries):
+        """Each query is its own parity query: [k, ...] -> [k, ...]."""
+        queries = jnp.asarray(queries)
+        assert queries.shape[0] == self.k, queries.shape
+        return queries
+
+    __call__ = encode
+
+    def decode_one(self, parity_out, outputs, missing_idx):
+        """Passthrough: the replica output is the reconstruction."""
+        del outputs, missing_idx
+        return jnp.asarray(parity_out)
+
+    def decode(self, parity_outs, outputs, missing_mask, parity_avail=None):
+        parity_outs = jnp.asarray(parity_outs)
+        outputs = jnp.asarray(outputs)
+        mm = jnp.asarray(missing_mask).reshape(
+            (self.k,) + (1,) * (outputs.ndim - 1))
+        if parity_avail is not None:
+            pa = jnp.asarray(parity_avail).reshape(mm.shape)
+            mm = jnp.logical_and(mm, pa)  # only fill from arrived replicas
+        return jnp.where(mm, parity_outs, outputs)
+
+    def recoverable(self, missing_mask, parity_avail):
+        """Per-row rule (vs the MDS all-or-nothing default): a missing row is
+        recoverable iff its own replica arrived."""
+        return np.asarray(missing_mask) & np.asarray(parity_avail)
+
+
+# --------------------------------------------------------------- registry ---
+_SCHEMES: Dict[str, Callable[..., CodingScheme]] = {}
+
+
+def register_scheme(name: str, factory: Callable[..., CodingScheme] = None):
+    """Register a scheme factory ``factory(k, r, backend, **kw)`` under
+    ``name``.  Usable as a decorator::
+
+        @register_scheme("mycode")
+        class MyScheme: ...
+    """
+    def _register(f):
+        _SCHEMES[name] = f
+        return f
+    if factory is None:
+        return _register
+    return _register(factory)
+
+
+def available_schemes():
+    return sorted(_SCHEMES)
+
+
+def get_scheme(scheme, k=None, r=None, *, backend=None, **kw) -> CodingScheme:
+    """Resolve ``scheme`` to a CodingScheme.
+
+    * a CodingScheme instance passes through, after validating it against
+      any k / r / backend the caller explicitly asked for (``None`` means
+      "whatever the instance has" — a silent mismatch would train or serve
+      the wrong code);
+    * a string is looked up in the registry and instantiated with
+      ``(k=k, r=r, backend=backend, **kw)`` (r defaults to 1, backend to
+      "jnp").
+    """
+    if not isinstance(scheme, str):
+        if not isinstance(scheme, CodingScheme):
+            raise TypeError(
+                f"not a CodingScheme or registered name: {scheme!r}")
+        if k is not None and scheme.k != k:
+            raise ValueError(
+                f"scheme {scheme.name!r} has k={scheme.k}, but k={k} was "
+                f"requested")
+        if r is not None and scheme.r != r:
+            raise ValueError(
+                f"scheme {scheme.name!r} has r={scheme.r}, but r={r} was "
+                f"requested")
+        if backend is not None and \
+                getattr(scheme, "backend", backend) != backend:
+            raise ValueError(
+                f"scheme {scheme.name!r} was built with "
+                f"backend={scheme.backend!r}, but backend={backend!r} was "
+                f"requested")
+        return scheme
+    if scheme not in _SCHEMES:
+        raise KeyError(
+            f"unknown coding scheme {scheme!r}; registered: "
+            f"{available_schemes()}")
+    if k is None:
+        raise ValueError("get_scheme(name, ...) requires k")
+    return _SCHEMES[scheme](k=k, r=1 if r is None else r,
+                            backend=backend or "jnp", **kw)
+
+
+register_scheme("sum", LinearScheme)
+register_scheme("concat", ConcatScheme)
+register_scheme(
+    "replication",
+    # replication fixes r = k; accept and ignore the caller's r so generic
+    # call sites (registry round-trip loops, frontends) need no special case
+    lambda k, r=1, backend="jnp", **kw: ReplicationScheme(
+        k=k, backend=backend, **kw))

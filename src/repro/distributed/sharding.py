@@ -13,7 +13,6 @@ never sharded.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.tree_util import tree_flatten_with_path, tree_unflatten, DictKey, SequenceKey
 

@@ -20,8 +20,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.distributed.logical import logical_rules, rules_for_mesh

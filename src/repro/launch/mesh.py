@@ -14,7 +14,18 @@ import; regular tests and benches see the 1 real CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5 has explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are Auto already
+    AxisType = None
+
+
+def _mesh(shape, axes, devices):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,8 +39,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"need {n} devices, have {len(devices)} — run via "
             "repro.launch.dryrun which forces 512 host devices")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _mesh(shape, axes, devices)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
@@ -37,5 +47,4 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return _mesh(shape, axes, jax.devices()[:n])

@@ -110,6 +110,8 @@ class Roofline:
 
 def analyze(compiled, chips):
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax < 0.5 wraps the dict in a list
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     detail, counts = collective_bytes(compiled.as_text())

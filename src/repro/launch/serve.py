@@ -4,10 +4,12 @@
         [--k 2] [--m 4] [--n 60] [--straggle-ms 120]
 
 Builds a reduced deployed LM, distills a parity LM for it (embedding-space
-addition code, DESIGN.md §3), then serves single-sequence queries through the
-threaded ParM frontend with an injected straggler instance and prints latency
-+ completion-path statistics. Degraded-mode predictions are the decoder's
-subtraction reconstructions.
+addition code — the ``sum`` entry of the scheme registry, DESIGN.md §2), then
+serves single-sequence queries through the threaded ParM frontend with an
+injected straggler instance and prints latency + completion-path statistics.
+Degraded-mode predictions are the decoder's subtraction reconstructions. The
+``--strategy`` flag picks any registered ``ResilienceStrategy``
+(DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from repro.configs.base import ARCH_IDS, get_config
 from repro.data.pipeline import lm_batches
 from repro.models import transformer as T
 from repro.serving.runtime import ParMFrontend
+from repro.serving.strategy import available_strategies
 from repro.training.optim import AdamConfig, adam_init
 from repro.training.train_lib import (make_parity_train_step,
                                       make_train_step)
@@ -34,6 +37,10 @@ def main():
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--n", type=int, default=60)
     ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--strategy", default="parm",
+                    choices=available_strategies())
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="deadline for the default_slo strategy")
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--parity-steps", type=int, default=40)
     ap.add_argument("--straggle-ms", type=float, default=120.0)
@@ -91,8 +98,15 @@ def main():
     def delay(iid):
         return args.straggle_ms / 1e3 if iid in slow else 0.0
 
+    extra = {}
+    if args.strategy == "default_slo":
+        # Clipper baseline: a constant (uniform-logits) default prediction
+        # returned at the SLO deadline
+        extra = dict(slo_ms=args.slo_ms,
+                     default_prediction=np.zeros((1, cfg.vocab), np.float32))
     fe = ParMFrontend(deployed_fwd, deployed, parity_params=parity,
-                      k=k, m=args.m, mode="parm", delay_fn=delay)
+                      k=k, m=args.m, strategy=args.strategy, delay_fn=delay,
+                      **extra)
     try:
         rng = np.random.default_rng(0)
         qs = []
@@ -103,9 +117,12 @@ def main():
         assert fe.wait_all(timeout=120), "unanswered queries"
         stats = fe.stats()
         lat = np.array([q.latency_ms for q in qs])
-        print(f"\nserved {args.n} queries "
-              f"(m={args.m}+{max(1, args.m // k)} parity, instance 0 "
-              f"straggles {args.straggle_ms:.0f} ms)")
+        lay = fe.strategy.layout(args.m, k, fe.r)
+        pools = f"main={lay.main}" + \
+            (f" parity={lay.parity}x{fe.r}" if lay.parity else "") + \
+            (f" backup={lay.backup}" if lay.backup else "")
+        print(f"\nserved {args.n} queries via '{args.strategy}' "
+              f"({pools}; instance 0 straggles {args.straggle_ms:.0f} ms)")
         print(f"latency p50={np.percentile(lat, 50):.1f}ms "
               f"p99={np.percentile(lat, 99):.1f}ms max={lat.max():.1f}ms")
         print(f"completed_by: {stats['completed_by']}")

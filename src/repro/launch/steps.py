@@ -3,15 +3,13 @@
 everything here is shape-level until jit.lower()."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES
 from repro.models import transformer as T
 from repro.training.loss import lm_loss
-from repro.training.optim import AdamConfig, adam_init, adam_update
+from repro.training.optim import AdamConfig, adam_update
 
 
 def pick_opt_config(cfg, n_params):

@@ -15,8 +15,6 @@ Three entry points per model:
 from __future__ import annotations
 
 import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

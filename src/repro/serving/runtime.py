@@ -1,4 +1,4 @@
-"""Threaded prediction-serving runtime with ParM coded resilience.
+"""Threaded prediction-serving runtime with pluggable coded resilience.
 
 A faithful (single-host) analogue of the paper's Clipper-based deployment:
 a frontend with a single dispatch queue per pool (the load-balancing strategy
@@ -6,6 +6,12 @@ of §5.1), model-instance worker threads running real JAX inference, coding
 groups of k consecutively dispatched query batches, frontend-side encode, and
 on-unavailability decode. Slowdowns are injected per instance (sleep), since
 the mitigation is agnostic to the cause (§2.2).
+
+Which pools exist, how queries are grouped/mirrored, and what happens on
+unavailability are owned by a ``ResilienceStrategy`` (``serving/strategy.py``)
+and the code itself by a ``CodingScheme`` (``core/scheme.py``) — the same two
+objects the DES in ``repro.serving.simulator`` consumes, so the threaded and
+simulated serving paths cannot drift. See DESIGN.md for the plugin API.
 
 Used by the end-to-end example (examples/serve_parm.py) and integration tests;
 the 100k-query tail studies use the DES in ``repro.serving.simulator``.
@@ -15,13 +21,15 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codes import SumEncoder, LinearDecoder
+from repro.core.scheme import get_scheme
+from repro.serving.strategy import get_strategy
 
 
 @dataclass
@@ -78,80 +86,128 @@ class ModelInstance(threading.Thread):
 class ParMFrontend:
     """Frontend: group assembly, encode, dispatch, decode-on-unavailability.
 
-    mode: "parm" | "equal_resources" | "default_slo" (Clipper default
-    prediction at the SLO deadline, §4.1 baseline)."""
+    ``strategy`` — a ``ResilienceStrategy`` or registered name
+    (``parm`` | ``equal_resources`` | ``replication`` | ``approx_backup`` |
+    ``default_slo`` | ``none``); owns pool layout and unavailability behavior.
+    ``scheme`` — a ``CodingScheme`` or registered name (``sum`` | ``concat`` |
+    ``replication``); owns encode/decode. ``backend`` selects the jnp or
+    Pallas-kernel hot path when ``scheme`` is given by name.
+
+    The old ``mode=`` kwarg is a deprecated alias for ``strategy=``.
+    """
 
     def __init__(self, fwd, deployed_params, parity_params=None, *, k=2,
-                 r=1, m=4, mode="parm", delay_fn=None, encode_fn=None,
-                 decode_fn=None, default_prediction=None, slo_ms=None):
+                 r=None, m=4, strategy="parm", scheme=None, backend=None,
+                 mode=None, delay_fn=None, encode_fn=None, decode_fn=None,
+                 default_prediction=None, slo_ms=None, backup_params=None):
         """``r > 1`` (paper §3.5): ``parity_params`` is a list of r parity
         models, each trained to the j-th Vandermonde combination; r parity
         queries are dispatched per coding group and the decoder solves the
-        linear system for up to r concurrent unavailabilities."""
-        self.k, self.r, self.mode = k, r, mode
-        self.encoder = SumEncoder(k, r)
-        self.decoder = LinearDecoder(k, r)
-        self._coeffs = np.asarray(self.encoder.coeffs)
-        self.encode_fn = encode_fn or (lambda q: np.asarray(self.encoder(q)))
+        linear system for up to r concurrent unavailabilities. ``r`` and
+        ``backend`` default to the scheme's own values when a scheme
+        *instance* is passed; an explicit mismatch raises."""
+        if mode is not None:
+            warnings.warn(
+                "ParMFrontend(mode=...) is deprecated; use strategy=",
+                DeprecationWarning, stacklevel=2)
+            strategy = mode
+        self.strategy = get_strategy(strategy)
+        if scheme is None:
+            scheme = self.strategy.scheme or "sum"
+        # validates k / r / backend against scheme instances
+        self.scheme = get_scheme(scheme, k=k, r=r, backend=backend)
+        self.k = k
+        # a scheme may fix its own parity count (replication: r = k)
+        self.r = self.scheme.r if self.strategy.coded else \
+            (1 if r is None else r)
+        self.encode_fn = encode_fn or (
+            lambda q: np.asarray(self.scheme.encode(q)))
         self.decode_fn = decode_fn
         self.default_prediction = default_prediction
         self.slo_ms = slo_ms
         self.queries = {}
         self.groups = {}   # gid -> {"members", "outs", "parity": {j: out}}
+        self.gid_of = {}
         self.lock = threading.Lock()
         self._next_gid = 0
         self._pending_group = []
+        self._early_outs = {}   # outputs that beat their group's assembly
 
+        layout = self.strategy.layout(m, k, self.r)
         self.main_q = queue.Queue()
-        n_parity = max(1, m // k)
         self.workers = []
-        n_main = m + (n_parity * r if mode == "equal_resources" else 0)
-        for i in range(n_main):
+        for i in range(layout.main):
             w = ModelInstance(i, self.main_q, fwd, deployed_params,
                               self._on_model_done, delay_fn)
             w.start()
             self.workers.append(w)
-        if mode == "parm":
-            if r == 1 and not isinstance(parity_params, (list, tuple)):
+        if self.strategy.coded:
+            if parity_params is None:
+                # replication-style schemes: the "parity model" is the
+                # deployed model itself (decode is a passthrough)
+                parity_params = [deployed_params] * self.r
+            elif not isinstance(parity_params, (list, tuple)):
                 parity_params = [parity_params]
-            assert len(parity_params) == r
+            assert len(parity_params) == self.r, \
+                (len(parity_params), self.r)
             self.parity_qs = []
-            for j in range(r):
+            for j in range(self.r):
                 pq = queue.Queue()
                 self.parity_qs.append(pq)
-                for i in range(n_parity):
+                for i in range(layout.parity):
                     w = ModelInstance(1000 + 100 * j + i, pq, fwd,
                                       parity_params[j],
                                       self._on_parity_done, delay_fn)
                     w.start()
                     self.workers.append(w)
             self.parity_q = self.parity_qs[0]      # back-compat alias
+        if layout.backup:
+            if backup_params is None:
+                backup_params = deployed_params
+            self.backup_q = queue.Queue()
+            for i in range(layout.backup):
+                w = ModelInstance(2000 + i, self.backup_q, fwd, backup_params,
+                                  self._on_backup_done, delay_fn)
+                w.start()
+                self.workers.append(w)
 
     # ------------------------------------------------------------------
     def submit(self, qid, x):
         """x: one query batch (leading batch dim, usually 1)."""
         q = Query(qid, x, arrival=time.perf_counter())
+        to_encode = None
         with self.lock:
             self.queries[qid] = q
-            if self.mode == "parm":
+            if self.strategy.coded:
                 self._pending_group.append(qid)
-                self.gid_of = getattr(self, "gid_of", {})
                 self.gid_of[qid] = self._next_gid
                 if len(self._pending_group) == self.k:
                     gid = self._next_gid
                     members = list(self._pending_group)
                     self._pending_group.clear()
                     self._next_gid += 1
-                    self.groups[gid] = {"members": members, "outs": {},
+                    # outputs that finished before the group existed
+                    outs = {m: self._early_outs.pop(m) for m in members
+                            if m in self._early_outs}
+                    self.groups[gid] = {"members": members, "outs": outs,
                                         "parity": {}}
-                    # frontend-side encode (1/k network overhead, §3.1);
-                    # r parity queries, one per parity model (§3.5)
-                    parities = self.encode_fn(
-                        np.stack([self.queries[m].data for m in members]))
-                    for j, pq in enumerate(self.parity_qs):
-                        pq.put(("parity", (gid, j), parities[j]))
-        self.main_q.put(("query", qid, x))
-        if self.mode == "default_slo" and self.slo_ms is not None:
+                    to_encode = (gid, np.stack(
+                        [self.queries[m].data for m in members]))
+        for _ in range(self.strategy.mirror):
+            self.main_q.put(("query", qid, x))
+        if to_encode is not None:
+            # frontend-side encode (1/k network overhead, §3.1); r parity
+            # queries, one per parity model (§3.5). Runs outside the lock —
+            # a JAX dispatch here would stall every completion callback —
+            # which is safe because no parity output for this gid can arrive
+            # before these puts
+            gid, stacked = to_encode
+            parities = self.encode_fn(stacked)
+            for j, pq in enumerate(self.parity_qs):
+                pq.put(("parity", (gid, j), parities[j]))
+        if self.strategy.backup:
+            self.backup_q.put(("query", qid, x))
+        if self.strategy.slo_default and self.slo_ms is not None:
             t = threading.Timer(self.slo_ms / 1e3, self._default_fire,
                                 args=(qid,))
             t.daemon = True
@@ -165,14 +221,23 @@ class ParMFrontend:
     # ------------------------------------------------------------------
     def _on_model_done(self, tag, qid, out):
         q = self.queries[qid]
-        q.fulfill(out, "model")
-        if self.mode != "parm":
+        if not self.strategy.coded:
+            q.fulfill(out, "model")
             return
+        # record the output and fulfill atomically: a decode racing in
+        # between would see the member as available yet read its zero
+        # placeholder, reconstructing garbage for the group's straggler
         with self.lock:
             gid = self.gid_of.get(qid)
             info = self.groups.get(gid)
             if info is not None:
                 info["outs"][qid] = out
+            else:
+                # finished before the k-th member arrived and the group was
+                # assembled; stash it so the decode never zero-fills this row
+                self._early_outs[qid] = out
+            q.fulfill(out, "model")
+            if info is not None:
                 self._maybe_decode(gid, info)
 
     def _on_parity_done(self, tag, key, out):
@@ -184,38 +249,55 @@ class ParMFrontend:
             info["parity"][j] = out
             self._maybe_decode(gid, info)
 
+    def _on_backup_done(self, tag, qid, out):
+        self.queries[qid].fulfill(out, "backup")
+
+    def _recoverable(self, miss_mask, parity_avail):
+        """Which missing rows can be reconstructed now? Schemes may refine
+        this (replication: per-row replica arrival); the default is the MDS
+        rule — all-or-nothing while #missing <= #parities arrived."""
+        rec_fn = getattr(self.scheme, "recoverable", None)
+        if rec_fn is not None:
+            return np.asarray(rec_fn(miss_mask, parity_avail))
+        if miss_mask.sum() <= parity_avail.sum():
+            return miss_mask
+        return np.zeros_like(miss_mask)
+
     def _maybe_decode(self, gid, info):
         """Called with lock held: reconstruct up to ``n_parities_arrived``
         missing predictions (r=1 fast path: subtraction decoder)."""
-        n_par = len(info["parity"])
-        missing = [m for m in info["members"] if m not in info["outs"]
-                   and not self.queries[m].event.is_set()]
-        if not missing or len(missing) > n_par:
+        if not info["parity"]:
+            return
+        members = info["members"]
+        miss_mask = np.array([m not in info["outs"]
+                              and not self.queries[m].event.is_set()
+                              for m in members])
+        parity_avail = np.array([j in info["parity"]
+                                 for j in range(self.r)])
+        miss_mask = self._recoverable(miss_mask, parity_avail)
+        missing = [m for m, miss in zip(members, miss_mask) if miss]
+        if not missing:
             return
         any_out = next(iter(info["parity"].values()))
         outs = np.stack([info["outs"].get(m, np.zeros_like(any_out))
-                         for m in info["members"]])
+                         for m in members])
         if self.r == 1 and len(missing) == 1:
-            j = info["members"].index(missing[0])
+            j = members.index(missing[0])
             if self.decode_fn is not None:
                 recon = self.decode_fn(info["parity"][0], outs, j)
             else:
-                recon = np.asarray(self.decoder.decode_one(
+                recon = np.asarray(self.scheme.decode_one(
                     info["parity"][0], outs, j))
             self.queries[missing[0]].fulfill(recon, "parity")
             return
         parity_outs = np.stack([
             info["parity"].get(j, np.zeros_like(any_out))
             for j in range(self.r)])
-        parity_avail = np.array([j in info["parity"]
-                                 for j in range(self.r)])
-        miss_mask = np.array([m in missing for m in info["members"]])
-        recon = np.asarray(self.decoder.decode(
+        recon = np.asarray(self.scheme.decode(
             jnp.asarray(parity_outs), jnp.asarray(outs),
             jnp.asarray(miss_mask), jnp.asarray(parity_avail)))
         for m in missing:
-            idx = info["members"].index(m)
-            self.queries[m].fulfill(recon[idx], "parity")
+            self.queries[m].fulfill(recon[members.index(m)], "parity")
 
     # ------------------------------------------------------------------
     def wait_all(self, timeout=60.0):
@@ -229,14 +311,37 @@ class ParMFrontend:
             w.stop = True
         for w in self.workers:
             w.join(timeout=1.0)
+        # a workload that isn't a multiple of k leaves a partial coding group
+        # behind; fulfill its members so wait_all() can't hang on them
+        with self.lock:
+            leftovers = list(self._pending_group)
+            self._pending_group.clear()
+        for qid in leftovers:
+            q = self.queries.get(qid)
+            if q is not None and not q.event.is_set():
+                q.fulfill(self.default_prediction, "flushed")
 
     def stats(self):
+        """Latency percentiles + completion-path counts, with the same keys
+        the DES (``repro.serving.simulator.simulate``) reports. Queries
+        flushed at shutdown appear in ``completed_by`` but are excluded from
+        the latency numbers — their finish time is a shutdown artifact."""
         lats = np.array([q.latency_ms for q in self.queries.values()
-                         if q.event.is_set()])
+                         if q.event.is_set() and q.completed_by != "flushed"])
         by = {}
         for q in self.queries.values():
-            by[q.completed_by] = by.get(q.completed_by, 0) + 1
-        return {"median_ms": float(np.percentile(lats, 50)),
-                "p99_ms": float(np.percentile(lats, 99)) if len(lats) > 1 else float(lats.max()),
-                "max_ms": float(lats.max()),
-                "completed_by": by, "n": len(lats)}
+            if q.completed_by:
+                by[q.completed_by] = by.get(q.completed_by, 0) + 1
+
+        def pct(p):
+            return float(np.percentile(lats, p)) if len(lats) else float("nan")
+
+        return {"strategy": self.strategy.name,
+                "median_ms": pct(50),
+                "p99_ms": pct(99),
+                "p999_ms": pct(99.9),
+                "mean_ms": float(lats.mean()) if len(lats) else float("nan"),
+                "max_ms": float(lats.max()) if len(lats) else float("nan"),
+                "completed_by": by,
+                "reconstructions": by.get("parity", 0),
+                "n": int(len(lats))}

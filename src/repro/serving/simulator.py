@@ -6,18 +6,14 @@ background *network-shuffle* load that transiently inflates the service time
 of randomly chosen instance pairs (§5.1 "Background traffic"), and 100k-query
 runs reporting median / p99 / p99.9.
 
-Strategies (all use the same total instance count m + m/k for apples-to-apples
-comparisons, §5.1 "Baselines"):
-  * ``parm``            — m deployed + m/k parity instances; coding groups of
-                          k consecutive dispatches; a query completes at
-                          min(own prediction, reconstruction-ready time).
-  * ``equal_resources`` — m + m/k deployed instances, no redundancy.
-  * ``approx_backup``   — m deployed + m/k approximate models that receive a
-                          *replica of every query* (§5.2.6); backup service
-                          time = deployed / speedup.
-  * ``replication``     — every query sent to 2 of m instances (2x resources;
-                          for the resource-overhead comparison).
-  * ``none``            — m instances only (used to find the queueing knee).
+Strategies are ``ResilienceStrategy`` objects from
+``repro.serving.strategy`` — the SAME objects the threaded runtime consumes,
+so the two serving layers cannot drift.  ``simulate(cfg, strategy)`` accepts
+either an instance or a registered name (``parm``, ``equal_resources``,
+``approx_backup``, ``replication``, ``default_slo``, ``none``); the strategy
+owns pool layout (the paper's m + m/k apples-to-apples budget, §5.1), group
+assembly and on-unavailability behavior, and a strategy registered from any
+other file runs here untouched.
 """
 from __future__ import annotations
 
@@ -26,6 +22,8 @@ import math
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.serving.strategy import get_strategy
 
 
 @dataclass
@@ -47,6 +45,7 @@ class SimConfig:
     encode_ms: float = 0.153        # paper §5.2.5 (k=3 median), in ms
     decode_ms: float = 0.014
     approx_speedup: float = 1.15    # §5.2.6, GPU cluster value
+    slo_ms: float = 200.0           # default-prediction deadline (default_slo)
     batch_size: int = 1             # §5.2.3; batched service is sublinear
     batch_cost: float = 0.2         # service(b) = service * (1 + cost*(b-1));
                                     # GPUs batch well (paper scaled qps by the
@@ -99,40 +98,29 @@ class _Pool:
         return out
 
 
-def simulate(cfg: SimConfig, strategy: str = "parm"):
-    """Returns dict with latency percentiles and bookkeeping."""
+def simulate(cfg: SimConfig, strategy="parm"):
+    """Run the DES under a ``ResilienceStrategy`` (instance or registered
+    name).  Returns dict with latency percentiles and bookkeeping."""
+    strat = get_strategy(strategy)
     rng = np.random.default_rng(cfg.seed)
     k = cfg.k
-    n_redundant = cfg.m // k
-    if strategy == "parm":
-        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms),
-                 "parity": _Pool(n_redundant, rng, cfg, cfg.service_ms)}
-    elif strategy == "equal_resources":
-        pools = {"main": _Pool(cfg.m + n_redundant, rng, cfg, cfg.service_ms)}
-    elif strategy == "approx_backup":
-        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms),
-                 "backup": _Pool(n_redundant, rng, cfg,
-                                 cfg.service_ms / cfg.approx_speedup)}
-    elif strategy == "replication":
-        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms)}
-    elif strategy == "none":
-        pools = {"main": _Pool(cfg.m, rng, cfg, cfg.service_ms)}
-    else:
-        raise ValueError(strategy)
+    layout = strat.layout(cfg.m, k)
+    pools = {"main": _Pool(layout.main, rng, cfg, cfg.service_ms)}
+    if layout.parity:
+        pools["parity"] = _Pool(layout.parity, rng, cfg, cfg.service_ms)
+    if layout.backup:
+        pools["backup"] = _Pool(layout.backup, rng, cfg,
+                                cfg.service_ms / cfg.approx_speedup)
 
     # pre-draw arrivals
     arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, cfg.n_queries))
     latency = np.full(cfg.n_queries, np.inf)
     arrival_t = arrivals.copy()
     done = np.zeros(cfg.n_queries, bool)
-    reconstructed = 0
 
-    # ParM group bookkeeping
+    # coding-group bookkeeping (coded strategies only)
     group_of = np.arange(cfg.n_queries) // k
     n_groups = (cfg.n_queries + k - 1) // k
-    group_remaining = np.full(n_groups, k)          # member preds outstanding
-    group_members_done_t = np.zeros(n_groups)       # last member finish
-    group_second_last_t = np.full(n_groups, np.nan)
     group_parity_t = np.full(n_groups, np.inf)      # parity output ready
     group_member_t = np.full((n_groups, k), np.inf)
 
@@ -170,10 +158,12 @@ def simulate(cfg: SimConfig, strategy: str = "parm"):
         for s, item, fin in pool.try_dispatch(now):
             push(fin, "finish", (pool_name, s, item))
 
-    def complete(qi, t):
+    def complete(qi, t, reconstructed=False):
         if not done[qi]:
             done[qi] = True
             latency[qi] = t - arrival_t[qi]
+            if reconstructed:
+                nonlocal_counter[0] += 1
 
     def maybe_reconstruct(g, t):
         """When parity + (k-1) members are in, the straggler's prediction can
@@ -186,8 +176,7 @@ def simulate(cfg: SimConfig, strategy: str = "parm"):
         for j in range(k):
             qi = base + j
             if qi < cfg.n_queries and not done[qi]:
-                complete(qi, max(ready, arrival_t[qi]))
-                nonlocal_counter[0] += 1
+                complete(qi, max(ready, arrival_t[qi]), reconstructed=True)
 
     nonlocal_counter = [0]
 
@@ -196,9 +185,10 @@ def simulate(cfg: SimConfig, strategy: str = "parm"):
         t = ev.t
         if ev.kind == "arrive":
             qi = ev.payload
-            if strategy == "parm":
+            for _ in range(strat.mirror):
                 pools["main"].submit(("q", qi))
-                dispatch("main", t)
+            dispatch("main", t)
+            if strat.coded:
                 g = group_of[qi]
                 if (qi % k == k - 1) or qi == cfg.n_queries - 1:
                     # group complete -> encode + dispatch parity query
@@ -206,25 +196,18 @@ def simulate(cfg: SimConfig, strategy: str = "parm"):
                     # encoding happens on the frontend; model the cost as
                     # added latency on the parity path
                     dispatch("parity", t + cfg.encode_ms)
-            elif strategy == "approx_backup":
-                pools["main"].submit(("q", qi))
+            if strat.backup:
                 pools["backup"].submit(("q", qi))
-                dispatch("main", t)
                 dispatch("backup", t)
-            elif strategy == "replication":
-                pools["main"].submit(("q", qi))
-                pools["main"].submit(("q", qi))
-                dispatch("main", t)
-            else:
-                pools["main"].submit(("q", qi))
-                dispatch("main", t)
+            if strat.slo_default:
+                push(t + cfg.slo_ms, "slo", qi)
         elif ev.kind == "finish":
             pool_name, s, item = ev.payload
             pools[pool_name].free.append(s)
             kind, idx = item
             if kind == "q":
                 complete(idx, t)
-                if strategy == "parm":
+                if strat.coded:
                     g = group_of[idx]
                     group_member_t[g, idx - g * k] = min(
                         group_member_t[g, idx - g * k], t)
@@ -233,13 +216,18 @@ def simulate(cfg: SimConfig, strategy: str = "parm"):
                 group_parity_t[idx] = min(group_parity_t[idx], t)
                 maybe_reconstruct(idx, t)
             dispatch(pool_name, t)
+        elif ev.kind == "slo":
+            # Clipper baseline: answer with the default prediction at the
+            # SLO deadline if the real prediction hasn't arrived
+            complete(ev.payload, t)
         elif ev.kind == "shuffle":
             schedule_shuffle(t)
 
     lat = latency[np.isfinite(latency)]
-    assert len(lat) == cfg.n_queries, f"unanswered queries: {cfg.n_queries - len(lat)}"
+    assert len(lat) == cfg.n_queries, \
+        f"unanswered queries: {cfg.n_queries - len(lat)}"
     return {
-        "strategy": strategy,
+        "strategy": strat.name,
         "median_ms": float(np.percentile(lat, 50)),
         "p99_ms": float(np.percentile(lat, 99)),
         "p999_ms": float(np.percentile(lat, 99.9)),

@@ -1,0 +1,109 @@
+"""Resilience strategies: one declarative object consumed by BOTH serving
+layers (the threaded runtime and the discrete-event simulator).
+
+A ``ResilienceStrategy`` owns the three decisions the paper's §5.1 baselines
+differ in, so the two serving implementations cannot drift:
+
+* worker-pool layout      — ``layout(m, k, r)`` -> ``PoolLayout`` (how the
+                            redundancy budget m/k is spent: parity instances,
+                            extra deployed instances, approximate backups);
+* group assembly          — ``coded`` (form coding groups of k and dispatch
+                            parity queries) vs ``mirror`` (replicate each
+                            query) vs nothing;
+* on-unavailability       — decode (coded), first-replica-wins (mirror),
+                            Clipper default prediction at the SLO deadline
+                            (``slo_default``), or just wait.
+
+Registered strategies (all sized for the paper's apples-to-apples m + m/k
+instance budget, §5.1):
+
+  ``parm``            m deployed + m/k parity instances per parity model;
+                      coding groups of k; decode on unavailability.
+  ``equal_resources`` m + m/k deployed instances, no redundancy.
+  ``replication``     every query dispatched twice to the main pool
+                      (2x resources; first completion wins).
+  ``approx_backup``   m deployed + m/k approximate backups that receive a
+                      replica of every query (§5.2.6).
+  ``default_slo``     m deployed; late predictions replaced by a default at
+                      the SLO deadline (§4.1 baseline).
+  ``none``            m deployed only (queueing-knee baseline).
+
+New strategies plug in with ``register_strategy`` from any file and are then
+runnable end-to-end through ``ParMFrontend`` and ``simulate`` untouched.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Union
+
+
+@dataclass(frozen=True)
+class PoolLayout:
+    """Instance counts per pool. ``parity`` is instances *per parity queue*
+    in the threaded runtime and the parity-pool size in the simulator."""
+    main: int
+    parity: int = 0
+    backup: int = 0
+
+
+@dataclass(frozen=True)
+class ResilienceStrategy:
+    """Declarative strategy; both serving layers interpret the same flags."""
+
+    name: str
+    coded: bool = False          # assemble groups of k, dispatch parity
+    mirror: int = 1              # copies of each query sent to the main pool
+    backup: bool = False         # replica of every query to a backup pool
+    slo_default: bool = False    # fulfill with the default prediction at SLO
+    extra_main: bool = False     # spend the redundancy budget on main pool
+    scheme: Optional[str] = None  # default CodingScheme name (coded only)
+
+    def n_redundant(self, m: int, k: int) -> int:
+        """The paper's redundancy budget: m/k instances (at least 1)."""
+        return max(1, m // k)
+
+    def layout(self, m: int, k: int, r: int = 1) -> PoolLayout:
+        nr = self.n_redundant(m, k)
+        return PoolLayout(
+            main=m + (nr * r if self.extra_main else 0),
+            parity=nr if self.coded else 0,
+            backup=nr if self.backup else 0)
+
+
+# --------------------------------------------------------------- registry ---
+_STRATEGIES: Dict[str, ResilienceStrategy] = {}
+
+
+def register_strategy(strategy: ResilienceStrategy) -> ResilienceStrategy:
+    """Register a strategy instance under its ``name``."""
+    _STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+def available_strategies():
+    return sorted(_STRATEGIES)
+
+
+def get_strategy(strategy: Union[str, ResilienceStrategy],
+                 **overrides) -> ResilienceStrategy:
+    """Resolve a name (or pass an instance through), optionally overriding
+    fields, e.g. ``get_strategy("parm", scheme="concat")``."""
+    if isinstance(strategy, ResilienceStrategy):
+        return replace(strategy, **overrides) if overrides else strategy
+    if isinstance(strategy, str):
+        if strategy not in _STRATEGIES:
+            raise KeyError(
+                f"unknown resilience strategy {strategy!r}; registered: "
+                f"{available_strategies()}")
+        base = _STRATEGIES[strategy]
+        return replace(base, **overrides) if overrides else base
+    raise TypeError(
+        f"not a ResilienceStrategy or registered name: {strategy!r}")
+
+
+register_strategy(ResilienceStrategy("parm", coded=True, scheme="sum"))
+register_strategy(ResilienceStrategy("equal_resources", extra_main=True))
+register_strategy(ResilienceStrategy("replication", mirror=2))
+register_strategy(ResilienceStrategy("approx_backup", backup=True))
+register_strategy(ResilienceStrategy("default_slo", slo_default=True))
+register_strategy(ResilienceStrategy("none"))

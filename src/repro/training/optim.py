@@ -8,8 +8,6 @@ recorded in DESIGN.md.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -2,8 +2,6 @@
 and the train_4k dry-run)."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

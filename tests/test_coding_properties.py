@@ -1,4 +1,4 @@
-"""Property tests for the ParM coding layer (hypothesis).
+"""Property tests for the ParM coding layer (deterministic parameter sweeps).
 
 Invariants from the paper:
   * For a linear deployed model F and the identity parity model F_P = F, the
@@ -13,52 +13,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.codes import (ConcatEncoder, LinearDecoder, SumEncoder,
                               make_code, vandermonde)
+from repro.core.scheme import get_scheme
 from repro.models.linear import init_linear, linear_fwd
 
-settings.register_profile("ci", deadline=None, max_examples=25)
-settings.load_profile("ci")
 
-
-@given(k=st.integers(2, 6), missing=st.data(), seed=st.integers(0, 2**16))
-def test_linear_model_exact_reconstruction(k, missing, seed):
-    j = missing.draw(st.integers(0, k - 1))
+@pytest.mark.parametrize("k,j,seed", [
+    (2, 0, 0), (2, 1, 101), (3, 1, 202), (4, 3, 303), (5, 2, 404),
+    (6, 0, 505), (6, 5, 606),
+])
+def test_linear_model_exact_reconstruction(k, j, seed):
     key = jax.random.PRNGKey(seed)
     p = init_linear(key, 12, 7)
     xs = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, 3, 12))
-    enc, dec = make_code(k, 1, "sum")
-    parity = enc(xs)[0]
+    scheme = get_scheme("sum", k=k, r=1)
+    parity = scheme.encode(xs)[0]
     outs = jnp.stack([linear_fwd(p, x) for x in xs])         # [k, 3, 7]
     parity_out = linear_fwd(p, parity)                        # ideal F_P = F
-    recon = dec.decode_one(parity_out, outs, j)
+    recon = scheme.decode_one(parity_out, outs, j)
     np.testing.assert_allclose(np.asarray(recon), np.asarray(outs[j]),
                                rtol=0, atol=1e-3)
 
 
-@given(k=st.integers(2, 5), r=st.integers(1, 3), seed=st.integers(0, 2**16),
-       data=st.data())
-def test_vandermonde_multi_failure_exact(k, r, seed, data):
-    n_missing = data.draw(st.integers(1, r))
-    missing = data.draw(st.permutations(list(range(k))))[:n_missing]
+@pytest.mark.parametrize("k,r,missing,seed", [
+    (2, 1, (0,), 0), (2, 2, (0, 1), 1), (3, 2, (2,), 2), (3, 2, (0, 2), 3),
+    (4, 3, (1, 3), 4), (4, 3, (0, 1, 2), 5), (5, 3, (4,), 6),
+    (5, 2, (1, 2), 7),
+])
+def test_vandermonde_multi_failure_exact(k, r, missing, seed):
     rng = np.random.default_rng(seed)
     outs_true = rng.normal(size=(k, 5)).astype(np.float32)
-    C = vandermonde(k, r)
+    scheme = get_scheme("sum", k=k, r=r)
+    C = np.asarray(scheme.coeffs)
     parity_outs = (C @ outs_true).astype(np.float32)          # ideal F_P_j
-    dec = LinearDecoder(k, r)
     mask = np.zeros(k, bool)
     mask[list(missing)] = True
     outs_in = outs_true.copy()
     outs_in[mask] = 999.0                                     # garbage
-    recon = np.asarray(dec.decode(jnp.asarray(parity_outs),
-                                  jnp.asarray(outs_in), jnp.asarray(mask)))
+    recon = np.asarray(scheme.decode(jnp.asarray(parity_outs),
+                                     jnp.asarray(outs_in),
+                                     jnp.asarray(mask)))
     np.testing.assert_allclose(recon[mask], outs_true[mask], atol=5e-3)
     np.testing.assert_allclose(recon[~mask], outs_true[~mask], atol=1e-6)
 
 
-@given(k=st.integers(2, 5), r=st.integers(1, 3))
+@pytest.mark.parametrize("k", [2, 3, 4, 5])
+@pytest.mark.parametrize("r", [1, 2, 3])
 def test_vandermonde_is_mds(k, r):
     """Every square system the decoder can face must be solvable: any
     m <= min(r, k) columns of the r x k coefficient matrix have rank m."""
@@ -70,13 +72,33 @@ def test_vandermonde_is_mds(k, r):
         assert np.linalg.matrix_rank(sub) == m
 
 
-@given(k=st.sampled_from([2, 4]), seed=st.integers(0, 100))
+@pytest.mark.parametrize("k,seed", [(2, 0), (4, 17), (2, 86), (4, 100)])
 def test_concat_encoder_footprint(k, seed):
     rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.normal(size=(k, 3, 32, 32, 3)).astype(np.float32))
     enc = ConcatEncoder(k)
     out = enc(q)
     assert out.shape == (1, 3, 32, 32, 3)     # same footprint as one query
+
+
+def test_concat_encoder_k3_footprint():
+    """k=3 tiles a 2x2 grid with one empty cell; footprint is unchanged."""
+    q = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, 2, 16, 16, 1)).astype(np.float32))
+    out = get_scheme("concat", k=3).encode(q)
+    assert out.shape == (1, 2, 16, 16, 1)
+
+
+@pytest.mark.parametrize("k,H,W", [(3, 15, 16), (3, 16, 15), (2, 9, 9),
+                                   (5, 16, 14)])
+def test_concat_encoder_rejects_indivisible_images(k, H, W):
+    """H or W not divisible by g = ceil(sqrt(k)) must raise, not silently
+    corrupt the grid."""
+    q = jnp.ones((k, 1, H, W, 1))
+    with pytest.raises(ValueError, match="divisible"):
+        ConcatEncoder(k)(q)
+    with pytest.raises(ValueError, match="divisible"):
+        get_scheme("concat", k=k).encode(q)
 
 
 def test_sum_encoder_r1_is_plain_sum():
@@ -97,3 +119,19 @@ def test_decode_one_matches_general_decode():
         mask[j] = True
         b = dec.decode(parity[None], outs, jnp.asarray(mask))[j]
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_make_code_shim_warns_and_matches_scheme():
+    """Legacy make_code() still works but deprecates toward get_scheme()."""
+    with pytest.warns(DeprecationWarning):
+        enc, dec = make_code(3, 1, "sum")
+    scheme = get_scheme("sum", k=3, r=1)
+    q = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, 2, 6)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(enc(q)),
+                               np.asarray(scheme.encode(q)), atol=1e-6)
+    outs = jnp.asarray(np.random.default_rng(1).normal(
+        size=(3, 2, 6)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(dec.decode_one(q[0], outs, 1)),
+        np.asarray(scheme.decode_one(q[0], outs, 1)), atol=1e-6)

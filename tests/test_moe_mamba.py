@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config
 from repro.models import mamba as M
@@ -95,8 +94,9 @@ def test_ssd_prefill_state_handoff():
                                atol=2e-4)
 
 
-@given(L=st.integers(1, 16), seed=st.integers(0, 50))
-@settings(deadline=None, max_examples=10)
+@pytest.mark.parametrize("L,seed", [
+    (1, 0), (3, 7), (4, 13), (7, 21), (11, 29), (15, 37), (16, 50),
+])
 def test_ssd_chunk_padding_invariance(L, seed):
     """Output is independent of chunk-size / padding choices."""
     cfg = get_config("mamba2-780m", reduced=True)

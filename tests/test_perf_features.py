@@ -3,7 +3,6 @@ coded-serve-step variants, and the inference sharding layout."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.launch import steps as ST
@@ -110,7 +109,7 @@ def test_frontend_with_pallas_kernel_codecs():
             jnp.asarray(parity_out), jnp.asarray(outs), j))
 
     slow = {0}
-    fe = ParMFrontend(fwd, W, parity_params=W, k=2, m=2, mode="parm",
+    fe = ParMFrontend(fwd, W, parity_params=W, k=2, m=2, strategy="parm",
                       delay_fn=lambda i: 0.4 if i in slow else 0.0,
                       encode_fn=encode_fn, decode_fn=decode_fn)
     try:
@@ -149,7 +148,7 @@ def test_frontend_r2_two_concurrent_stragglers():
         return 2.5 if iid in slow else 0.0
 
     fe = ParMFrontend(fwd, W, parity_params=parity_models, k=2, r=2, m=2,
-                      mode="parm", delay_fn=delay)
+                      strategy="parm", delay_fn=delay)
     try:
         xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
         qs = [fe.submit(i, x) for i, x in enumerate(xs)]

@@ -1,0 +1,275 @@
+"""Tests for the CodingScheme / ResilienceStrategy plugin API (DESIGN.md):
+registry round-trips, jnp-vs-pallas backend equivalence, r=2 decode under a
+straggling *parity* instance, and the replication scheme running end-to-end
+through both serving layers without touching either.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheme import (CodingScheme, LinearScheme, available_schemes,
+                               get_scheme, register_scheme)
+from repro.serving.runtime import ParMFrontend
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.strategy import (ResilienceStrategy, available_strategies,
+                                    get_strategy, register_strategy)
+
+
+# ------------------------------------------------------------- registry ----
+def test_scheme_registry_round_trips():
+    """Every registered name resolves, satisfies the protocol, and encodes
+    with the shape contract [k, ...] -> [r, ...]."""
+    assert {"sum", "concat", "replication"} <= set(available_schemes())
+    for name in available_schemes():
+        s = get_scheme(name, k=4)
+        assert isinstance(s, CodingScheme), name
+        assert s.k == 4 and s.name == name
+        assert np.asarray(s.coeffs).shape == (s.r, s.k)
+        q = jnp.ones((4, 2, 16, 16, 1)) if name == "concat" else \
+            jnp.arange(4 * 2 * 8, dtype=jnp.float32).reshape(4, 2, 8)
+        p = s.encode(q)
+        assert p.shape[0] == s.r and p.shape[1:] == q.shape[1:], name
+
+
+def test_get_scheme_passthrough_and_errors():
+    s = get_scheme("sum", k=3, r=2)
+    assert get_scheme(s) is s                    # instances pass through
+    assert get_scheme(s, k=3, r=2) is s          # matching ask is fine
+    with pytest.raises(KeyError, match="unknown coding scheme"):
+        get_scheme("nope", k=2)
+    with pytest.raises(ValueError, match="requires k"):
+        get_scheme("sum")
+    with pytest.raises(ValueError, match="backend"):
+        get_scheme("sum", k=2, backend="tpu-magic")
+
+
+def test_get_scheme_validates_instances_against_explicit_ask():
+    """Passing an instance along with explicit k/r/backend must not silently
+    ignore a mismatch — the caller would train or serve the wrong code."""
+    s = get_scheme("sum", k=2, r=1)
+    with pytest.raises(ValueError, match="k=2"):
+        get_scheme(s, k=4)
+    with pytest.raises(ValueError, match="r=1"):
+        get_scheme(s, k=2, r=2)
+    with pytest.raises(ValueError, match="backend"):
+        get_scheme(s, k=2, backend="pallas")
+    # and through the frontend / trainer entry points
+    with pytest.raises(ValueError, match="r=1"):
+        ParMFrontend(lambda p, x: x @ p, jnp.ones((4, 3)), k=2, r=2,
+                     scheme=s)
+
+
+def test_custom_encode_override_is_used_for_training_data():
+    """A scheme overriding encode() (the DESIGN.md learned-encoder extension
+    point) must have its real encode feed the parity training set — no
+    silent coeffs-product shortcut."""
+    from repro.core.parity import group_queries, make_parity_dataset
+
+    class ShiftedSum(LinearScheme):
+        def encode(self, queries):
+            return super().encode(queries) + 1.0
+
+    s = ShiftedSum(k=2, r=1, name="shifted")
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    fx = rng.normal(size=(8, 4)).astype(np.float32)
+    pq, _ = make_parity_dataset(x, fx, 2, s, 0, np.random.default_rng(1))
+    groups, _ = group_queries(x, 2, np.random.default_rng(1))
+    want = np.asarray(s.encode(np.moveaxis(groups, 1, 0)))[0]
+    np.testing.assert_allclose(pq, want, atol=1e-6)   # includes the +1 shift
+
+
+def test_strategy_registry_round_trips():
+    assert {"parm", "equal_resources", "replication", "default_slo",
+            "approx_backup", "none"} <= set(available_strategies())
+    for name in available_strategies():
+        st = get_strategy(name)
+        assert st.name == name
+        lay = st.layout(m=12, k=3)
+        assert lay.main >= 12
+    assert get_strategy("parm").layout(12, 2).parity == 6
+    assert get_strategy("equal_resources").layout(12, 2).main == 18
+    obj = get_strategy("parm")
+    assert get_strategy(obj) is obj
+    with pytest.raises(KeyError, match="unknown resilience strategy"):
+        get_strategy("nope")
+
+
+# ------------------------------------------- pallas / jnp backend parity ----
+@pytest.mark.parametrize("k,r,B,F", [(2, 1, 1, 128), (3, 2, 2, 130),
+                                     (4, 1, 8, 1000)])
+def test_backend_equivalence_encode(k, r, B, F):
+    rng = np.random.default_rng(k * 10 + r)
+    q = jnp.asarray(rng.normal(size=(k, B, F)).astype(np.float32))
+    jnp_s = get_scheme("sum", k=k, r=r, backend="jnp")
+    pal_s = get_scheme("sum", k=k, r=r, backend="pallas")
+    np.testing.assert_allclose(np.asarray(jnp_s.encode(q)),
+                               np.asarray(pal_s.encode(q)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("k,B,V", [(2, 1, 100), (3, 2, 513), (4, 4, 1000)])
+def test_backend_equivalence_decode_one(k, B, V):
+    rng = np.random.default_rng(k)
+    outs = jnp.asarray(rng.normal(size=(k, B, V)).astype(np.float32))
+    par = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+    jnp_s = get_scheme("sum", k=k, r=1, backend="jnp")
+    pal_s = get_scheme("sum", k=k, r=1, backend="pallas")
+    for j in range(k):
+        np.testing.assert_allclose(np.asarray(jnp_s.decode_one(par, outs, j)),
+                                   np.asarray(pal_s.decode_one(par, outs, j)),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------- r=2, straggling parity ------
+def test_r2_decode_with_straggling_parity_instance():
+    """§3.5 with a parity straggler: decode is exact whenever #available
+    parities >= #missing, exercised through the scheme's parity_avail path."""
+    k, r = 3, 2
+    rng = np.random.default_rng(1)
+    scheme = get_scheme("sum", k=k, r=r)
+    outs_true = rng.normal(size=(k, 4)).astype(np.float32)
+    parity_outs = (np.asarray(scheme.coeffs) @ outs_true).astype(np.float32)
+    miss = np.array([True, False, False])
+    for lost_parity in range(r):
+        pa = np.ones(r, bool)
+        pa[lost_parity] = False                  # that parity never arrived
+        got = np.asarray(scheme.decode(
+            jnp.asarray(parity_outs),
+            jnp.asarray(np.where(miss[:, None], 99.0, outs_true)),
+            jnp.asarray(miss), jnp.asarray(pa)))
+        np.testing.assert_allclose(got, outs_true, atol=1e-3)
+
+
+def test_frontend_r2_straggling_parity_instance():
+    """Threaded runtime: one of the two parity models straggles forever; the
+    group must still decode one missing member from the surviving parity."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+
+    def fwd(p, x):
+        return x @ p
+
+    # instance ids: main = 0..m-1; parity queue j workers = 1000 + 100*j + i.
+    # Straggle main instance 0 AND the whole parity-0 queue; give the fast
+    # main instance a small service time so it cannot drain the whole queue
+    # before the straggler picks up its item.
+    def delay(iid):
+        return {0: 2.0, 1: 0.25, 1000: 2.0}.get(iid, 0.0)
+
+    fe = ParMFrontend(fwd, W, parity_params=[W, W], k=2, r=2, m=2,
+                      strategy="parm", delay_fn=delay)
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        assert any(q.completed_by == "parity" for q in qs)
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                       atol=1e-2)
+    finally:
+        fe.shutdown()
+
+
+def test_train_parity_models_encoder_kind_shim():
+    """encoder_kind= still works but warns toward scheme=."""
+    from repro.core.parity import train_parity_models
+    from repro.models.linear import init_linear, linear_fwd
+    import jax
+    x = np.random.default_rng(0).normal(size=(64, 6)).astype(np.float32)
+    p = init_linear(jax.random.PRNGKey(0), 6, 3)
+    with pytest.warns(DeprecationWarning, match="scheme="):
+        pp, scheme = train_parity_models(
+            p, linear_fwd, lambda key: init_linear(key, 6, 3), x, k=2,
+            encoder_kind="sum", epochs=1)
+    assert scheme.name == "sum" and len(pp) == 1
+
+
+# -------------------------------------- replication scheme, end-to-end -----
+def test_replication_scheme_through_threaded_runtime():
+    """The replication *scheme* (registered in core/scheme.py only) runs
+    through the coded serving path untouched: replicas are the parity
+    queries, decode is a passthrough."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+
+    def fwd(p, x):
+        return x @ p
+
+    fe = ParMFrontend(fwd, W, k=2, m=2, strategy="parm", scheme="replication",
+                      delay_fn=lambda i: {0: 0.5, 1: 0.1}.get(i, 0.0))
+    try:
+        assert fe.r == 2                     # scheme fixed r = k
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(4)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        assert any(q.completed_by == "parity" for q in qs)
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                       atol=1e-4)
+    finally:
+        fe.shutdown()
+
+
+def test_new_strategy_registered_elsewhere_runs_in_des_and_runtime():
+    """Acceptance: registering a strategy in ONE place makes it runnable
+    through both serving layers with no edits to either."""
+    register_strategy(ResilienceStrategy("triplication", mirror=3))
+    try:
+        r = simulate(SimConfig(n_queries=1500, qps=120, m=9, k=2, seed=0),
+                     "triplication")
+        assert r["strategy"] == "triplication"
+
+        W = jnp.ones((4, 3), jnp.float32)
+        fe = ParMFrontend(lambda p, x: x @ p, W, k=2, m=3,
+                          strategy="triplication",
+                          delay_fn=lambda i: 0.3 if i < 2 else 0.0)
+        try:
+            qs = [fe.submit(i, np.ones((1, 4), np.float32))
+                  for i in range(4)]
+            assert fe.wait_all(timeout=15)
+            assert all(q.completed_by == "model" for q in qs)
+        finally:
+            fe.shutdown()
+    finally:
+        from repro.serving import strategy as _strat
+        _strat._STRATEGIES.pop("triplication", None)
+
+
+def test_new_scheme_registered_elsewhere_runs_in_runtime():
+    """Same for schemes: a doubled-sum code registered here (not in the
+    serving layer) serves coded traffic immediately."""
+    class DoubledSum(LinearScheme):
+        @property
+        def coeffs(self):
+            return 2.0 * LinearScheme.coeffs.fget(self)
+
+    register_scheme(
+        "doubled-sum",
+        lambda k, r=1, backend="jnp", **kw: DoubledSum(
+            k=k, r=r, backend=backend, name="doubled-sum"))
+    try:
+        W = jnp.asarray(np.random.default_rng(0).normal(
+            size=(8, 5)).astype(np.float32))
+
+        def fwd(p, x):
+            return x @ p
+
+        # ideal parity model for coeffs [2, 2]: F_P(2x1 + 2x2) = 2F(x1)+2F(x2)
+        fe = ParMFrontend(fwd, W, parity_params=W, k=2, m=2,
+                          strategy="parm", scheme="doubled-sum",
+                          delay_fn=lambda i: {0: 0.5, 1: 0.1}.get(i, 0.0))
+        try:
+            xs = [np.random.default_rng(i).normal(
+                size=(1, 8)).astype(np.float32) for i in range(4)]
+            qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+            assert fe.wait_all(timeout=30)
+            assert any(q.completed_by == "parity" for q in qs)
+            for q, x in zip(qs, xs):
+                np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                           atol=1e-3)
+        finally:
+            fe.shutdown()
+    finally:
+        from repro.core import scheme as _scheme
+        _scheme._SCHEMES.pop("doubled-sum", None)

@@ -5,22 +5,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.serving.runtime import ParMFrontend
 from repro.serving.simulator import SimConfig, simulate
+from repro.serving.strategy import available_strategies, get_strategy
 
 
 # ----------------------------------------------------------------- DES ----
-@given(strategy=st.sampled_from(["parm", "equal_resources", "approx_backup",
-                                 "replication", "none"]),
-       seed=st.integers(0, 20), k=st.sampled_from([2, 3, 4]))
-@settings(deadline=None, max_examples=12)
+@pytest.mark.parametrize("strategy", ["parm", "equal_resources",
+                                      "approx_backup", "replication",
+                                      "default_slo", "none"])
+@pytest.mark.parametrize("seed,k", [(0, 2), (7, 3), (20, 4)])
 def test_des_all_queries_answered(strategy, seed, k):
     cfg = SimConfig(n_queries=2000, qps=200, m=12, k=k, seed=seed)
     r = simulate(cfg, strategy)          # internal assert: none unanswered
     assert r["median_ms"] > 0
     assert r["p999_ms"] >= r["p99_ms"] >= r["median_ms"]
+
+
+def test_des_accepts_strategy_object():
+    """simulate() takes the same ResilienceStrategy objects the threaded
+    frontend consumes — the string is just registry sugar."""
+    cfg = SimConfig(n_queries=2000, qps=200, m=12, k=2, seed=0)
+    by_name = simulate(cfg, "parm")
+    by_obj = simulate(cfg, get_strategy("parm"))
+    assert by_name == by_obj
+    assert by_obj["strategy"] == "parm"
+
+
+def test_des_every_registered_strategy_runs():
+    cfg = SimConfig(n_queries=1000, qps=150, m=8, k=2, seed=1)
+    for name in available_strategies():
+        r = simulate(cfg, name)
+        assert r["strategy"] == name
+        assert np.isfinite(r["p999_ms"])
 
 
 def test_des_parm_beats_equal_resources_tail():
@@ -65,7 +83,7 @@ def test_threaded_parm_reconstruction_correct():
         return 0.5 if iid in slow else 0.0
 
     fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=2, m=2,
-                      mode="parm", delay_fn=delay)
+                      strategy="parm", delay_fn=delay)
     try:
         xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(6)]
         qs = [fe.submit(i, x) for i, x in enumerate(xs)]
@@ -83,12 +101,74 @@ def test_threaded_parm_reconstruction_correct():
 
 def test_threaded_equal_resources_completes():
     W = jnp.ones((4, 3), jnp.float32)
-    fe = ParMFrontend(_linear_fwd, W, k=2, m=2, mode="equal_resources")
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=2, strategy="equal_resources")
     try:
         qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(4)]
         assert fe.wait_all(timeout=10)
         for q in qs:
             assert q.completed_by == "model"
+    finally:
+        fe.shutdown()
+
+
+def test_threaded_member_output_before_group_assembly():
+    """A member whose inference finishes before its coding group is even
+    assembled (slow submitter, fast worker) must still contribute its real
+    output to the decode — not a zeros placeholder."""
+    rng = np.random.default_rng(3)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+
+    fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=2, m=2,
+                      strategy="parm",
+                      delay_fn=lambda i: 0.5 if i < 2 else 0.0)
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        q0 = fe.submit(0, xs[0])
+        assert q0.event.wait(10)           # q0 done before the group exists
+        q1 = fe.submit(1, xs[1])           # group forms now; q1 straggles
+        assert fe.wait_all(timeout=30)
+        assert q1.completed_by == "parity"
+        np.testing.assert_allclose(q1.result, np.asarray(_linear_fwd(W, xs[1])),
+                                   atol=1e-3)
+    finally:
+        fe.shutdown()
+
+
+def test_frontend_rejects_mismatched_scheme_k():
+    """A scheme instance built for a different k must fail fast at
+    construction, not as a mid-submit assertion that hangs wait_all."""
+    from repro.core.scheme import get_scheme
+    W = jnp.ones((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="k=2"):
+        ParMFrontend(_linear_fwd, W, parity_params=W, k=4,
+                     scheme=get_scheme("sum", k=2))
+
+
+def test_threaded_mode_kwarg_is_deprecated_alias():
+    """mode= still works (shim) but warns toward strategy=."""
+    W = jnp.ones((4, 3), jnp.float32)
+    with pytest.warns(DeprecationWarning, match="strategy="):
+        fe = ParMFrontend(_linear_fwd, W, k=2, m=2, mode="equal_resources")
+    try:
+        assert fe.strategy.name == "equal_resources"
+        qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(2)]
+        assert fe.wait_all(timeout=10)
+        assert all(q.completed_by == "model" for q in qs)
+    finally:
+        fe.shutdown()
+
+
+def test_threaded_replication_strategy_completes():
+    """Registered replication strategy: each query dispatched twice to the
+    main pool; first completion wins even with a permanent straggler."""
+    W = jnp.ones((4, 3), jnp.float32)
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=3, strategy="replication",
+                      delay_fn=lambda i: 0.4 if i == 0 else 0.0)
+    try:
+        qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(6)]
+        assert fe.wait_all(timeout=15)
+        for q in qs:
+            np.testing.assert_allclose(q.result, np.full((1, 3), 4.0))
     finally:
         fe.shutdown()
 
@@ -101,7 +181,7 @@ def test_threaded_default_slo_baseline():
     def delay(iid):
         return 0.3                                  # everything is late
 
-    fe = ParMFrontend(_linear_fwd, W, k=2, m=1, mode="default_slo",
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=1, strategy="default_slo",
                       delay_fn=delay, default_prediction=default, slo_ms=50)
     try:
         q = fe.submit(0, np.ones((1, 4), np.float32))
@@ -112,16 +192,46 @@ def test_threaded_default_slo_baseline():
         fe.shutdown()
 
 
+def test_stats_empty_and_singleton_safe():
+    """stats() must not crash before any query completes, and must report
+    the simulator's percentile keys on a single-query workload."""
+    W = jnp.ones((4, 3), jnp.float32)
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=1, strategy="none")
+    try:
+        s = fe.stats()
+        assert s["n"] == 0 and np.isnan(s["median_ms"])
+        q = fe.submit(0, np.ones((1, 4), np.float32))
+        q.event.wait(10)
+        s = fe.stats()
+        for key in ("median_ms", "p99_ms", "p999_ms", "mean_ms", "max_ms"):
+            assert np.isfinite(s[key]), (key, s)
+        assert s["n"] == 1
+    finally:
+        fe.shutdown()
+
+
+def test_shutdown_flushes_partial_group():
+    """A workload that is not a multiple of k leaves a pending coding group;
+    shutdown() fulfills those members so wait_all() cannot hang on them."""
+    W = jnp.ones((4, 3), jnp.float32)
+    fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=4, m=1,
+                      strategy="parm")
+    qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(3)]
+    fe.shutdown()      # partial group of 3 < k=4; no parity was dispatched
+    assert fe.wait_all(timeout=5)
+    assert all(q.event.is_set() for q in qs)
+
+
 def test_encode_decode_latency_budget():
     """Paper §5.2.5: encode/decode are microsecond-scale next to inference.
     (CPU-container analogue: encode+decode of a [k,1,1000] group must be
     well under a ResNet-18-class inference time of ~25 ms.)"""
-    from repro.core.codes import LinearDecoder, SumEncoder
-    enc, dec = SumEncoder(2, 1), LinearDecoder(2, 1)
+    from repro.core.scheme import get_scheme
+    scheme = get_scheme("sum", k=2, r=1)
     q = jnp.ones((2, 1, 1000))
-    encode = jax.jit(lambda x: enc(x))
+    encode = jax.jit(lambda x: scheme.encode(x))
     outs = jnp.ones((2, 1, 1000))
-    decode = jax.jit(lambda p, o: dec.decode_one(p, o, 0))
+    decode = jax.jit(lambda p, o: scheme.decode_one(p, o, 0))
     encode(q).block_until_ready()
     decode(q[0], outs).block_until_ready()
     t0 = time.perf_counter()

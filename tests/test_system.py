@@ -39,14 +39,14 @@ def trained_system():
 
     for xb, yb in batched(x, y, 64, epochs=3):
         params, st, _ = step(params, st, xb, yb)
-    pp, enc, dec = train_parity_models(
+    pp, scheme = train_parity_models(
         params, fwd, lambda k: build("mlp", k, image_shape=(8, 8, 1))[0],
-        x, k=2, epochs=4, seed=0)
-    return params, fwd, pp, enc, dec, (x, y, xt, yt)
+        x, k=2, scheme="sum", epochs=4, seed=0)
+    return params, fwd, pp, scheme, (x, y, xt, yt)
 
 
 def test_degraded_accuracy_beats_default(trained_system):
-    params, fwd, pp, enc, dec, (x, y, xt, yt) = trained_system
+    params, fwd, pp, scheme, (x, y, xt, yt) = trained_system
     k = 2
     a_a = topk_accuracy(np.asarray(fwd(params, jnp.asarray(xt))), yt)
     rng = np.random.default_rng(2)
@@ -59,7 +59,7 @@ def test_degraded_accuracy_beats_default(trained_system):
     C = vandermonde(k, 1)
     parity_q = np.einsum("k,gk...->g...", C[0], groups)
     parity_out = np.asarray(fwd(pp[0], jnp.asarray(parity_q)))[:, None]
-    a_d = degraded_accuracy(parity_out, member, glabels, dec)
+    a_d = degraded_accuracy(parity_out, member, glabels, scheme)
     assert a_a > 0.8, a_a
     assert a_d > 0.5, a_d                     # >> default 0.1
     # paper Eq (1): overall accuracy at f_u=0.1
@@ -70,7 +70,7 @@ def test_degraded_accuracy_beats_default(trained_system):
 def test_served_parm_pipeline(trained_system):
     """Straggler-injected threaded serving: reconstructed predictions are the
     decoder outputs and most are correct."""
-    params, fwd, pp, enc, dec, (x, y, xt, yt) = trained_system
+    params, fwd, pp, scheme, (x, y, xt, yt) = trained_system
     jfwd = jax.jit(fwd)
     slow = {1}
 
@@ -78,7 +78,7 @@ def test_served_parm_pipeline(trained_system):
         return 0.4 if iid in slow else 0.0
 
     fe = ParMFrontend(jfwd, params, parity_params=pp[0], k=2, m=2,
-                      mode="parm", delay_fn=delay)
+                      strategy="parm", scheme=scheme, delay_fn=delay)
     try:
         n = 12
         qs = [fe.submit(i, xt[i:i + 1]) for i in range(n)]
