@@ -115,7 +115,32 @@ def bench_batching():
         print(f"fig_batch{b}_p999_reduction,{red:.2%},qps={qps}")
 
 
+def bench_r2_multi_straggler():
+    """§3.5: r=2 Vandermonde tolerates two concurrent unavailabilities per
+    group. Under correlated whole-pool slowdowns (where groups regularly
+    lose several members at once) the second parity model keeps closing the
+    tail that r=1 cannot."""
+    for r in (1, 2):
+        cfg = SimConfig(n_queries=NQ // 2, qps=270, m=12, k=2, r=r, seed=1)
+        res = simulate(cfg, "parm", scenario="correlated_slowdown")
+        _row(f"fig_r{r}_correlated_parm", res,
+             extra=f"recon={res['reconstructions']}")
+
+
+def bench_scenarios():
+    """Every registered fault scenario, parm vs unprotected: crash/restart,
+    correlated slowdowns, bursty MMPP arrivals, heterogeneous hardware."""
+    from repro.serving.scenarios import available_scenarios
+    for scen in available_scenarios():
+        cfg = SimConfig(n_queries=NQ // 2, qps=270, m=12, k=2, seed=1)
+        parm = simulate(cfg, "parm", scenario=scen)
+        none = simulate(cfg, "none", scenario=scen)
+        red = 1 - parm["p999_ms"] / none["p999_ms"]
+        print(f"scenario_{scen}_p999_reduction,{red:.2%},"
+              f"parm={parm['p999_ms']:.1f} none={none['p999_ms']:.1f}")
+
+
 ALL = [bench_fig11_latency_vs_qps, bench_fig12_vary_k,
        bench_fig13_network_imbalance, bench_fig14_light_multitenancy,
        bench_fig15_approx_backup, bench_sec525_encode_decode_latency,
-       bench_batching]
+       bench_batching, bench_r2_multi_straggler, bench_scenarios]

@@ -1,9 +1,15 @@
 """Tail-latency study (paper Fig 11) via the discrete-event simulator.
 
-    PYTHONPATH=src python examples/latency_study.py [--qps 270] [--m 12]
+    PYTHONPATH=src python examples/latency_study.py [--qps 270] [--m 12] \
+        [--r 2] [--scheme replication] [--scenario crash]
+
+``--scenario`` picks a registered fault scenario (``crash``, ``bursty``,
+``storm``, ...); omitted, the paper's background network-shuffle load runs.
+``--scheme`` / ``--r`` select the code served by the coded strategy (§3.5).
 """
 import argparse
 
+from repro.serving.scenarios import available_scenarios
 from repro.serving.simulator import SimConfig, simulate
 
 
@@ -12,20 +18,32 @@ def main():
     ap.add_argument("--qps", type=float, default=270)
     ap.add_argument("--m", type=int, default=12)
     ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--r", type=int, default=1,
+                    help="parity models per coding group (paper §3.5)")
     ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--scheme", default=None,
+                    help="coding scheme for coded strategies "
+                         "(sum | concat | replication; default: strategy's)")
+    ap.add_argument("--scenario", default=None,
+                    choices=available_scenarios(),
+                    help="fault scenario (default: legacy shuffle load)")
     args = ap.parse_args()
 
-    cfg = SimConfig(n_queries=args.n, qps=args.qps, m=args.m, k=args.k)
+    cfg = SimConfig(n_queries=args.n, qps=args.qps, m=args.m, k=args.k,
+                    r=args.r)
+    load = args.scenario or "background network shuffles"
     print(f"m={args.m} deployed instances, k={args.k} "
-          f"({1/args.k:.0%} redundancy), {args.qps} qps, "
-          f"{args.n} queries, background network shuffles on\n")
-    print(f"{'strategy':18s} {'median':>8s} {'p99':>8s} {'p99.9':>8s} "
-          f"{'gap':>8s} {'recon':>7s}")
+          f"({1/args.k:.0%} redundancy), r={args.r}, {args.qps} qps, "
+          f"{args.n} queries, load: {load}\n")
+    print(f"{'strategy':18s} {'scheme':12s} {'median':>8s} {'p99':>8s} "
+          f"{'p99.9':>8s} {'gap':>8s} {'recon':>7s}")
     for strat in ("none", "equal_resources", "parm", "approx_backup",
                   "replication"):
-        r = simulate(cfg, strat)
+        r = simulate(cfg, strat, scheme=args.scheme,
+                     scenario=args.scenario)
         gap = r["p999_ms"] - r["median_ms"]
-        print(f"{strat:18s} {r['median_ms']:7.1f}ms {r['p99_ms']:7.1f}ms "
+        print(f"{strat:18s} {str(r['scheme']):12s} "
+              f"{r['median_ms']:7.1f}ms {r['p99_ms']:7.1f}ms "
               f"{r['p999_ms']:7.1f}ms {gap:7.1f}ms "
               f"{r['reconstructions']:7d}")
 

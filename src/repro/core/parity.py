@@ -24,11 +24,11 @@ import numpy as np
 
 from repro.core.scheme import LinearScheme, ReplicationScheme, get_scheme
 from repro.training.loss import parity_mse
+from repro.training.optim import AdamConfig, adam_init, adam_update
 
 # schemes whose (un-overridden) encode is exactly the coeffs product, so the
 # per-row training set can be built with one einsum instead of a full encode
 _ROW_SEPARABLE_ENCODES = (LinearScheme.encode, ReplicationScheme.encode)
-from repro.training.optim import AdamConfig, adam_init, adam_update
 
 
 def group_queries(x, k, rng):

@@ -35,7 +35,7 @@ tiny [k, k] solve off the latency-critical path.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Protocol, runtime_checkable
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +68,38 @@ class CodingScheme(Protocol):
 def _check_backend(backend):
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+
+def recoverable_rows(scheme, missing_mask, parity_avail):
+    """Which missing rows can be reconstructed right now?
+
+    The single recoverability rule BOTH serving layers consult (the threaded
+    ``ParMFrontend`` and the DES ``simulate``), so their decode decisions
+    cannot drift.  A scheme may refine it with an optional
+    ``recoverable(missing_mask, parity_avail)`` method (replication: per-row
+    replica arrival); the default is the MDS rule — all-or-nothing while
+    #missing <= #parities arrived.
+    """
+    missing_mask = np.asarray(missing_mask, bool)
+    parity_avail = np.asarray(parity_avail, bool)
+    rec_fn = getattr(scheme, "recoverable", None)
+    if rec_fn is not None:
+        return np.asarray(rec_fn(missing_mask, parity_avail), bool)
+    if missing_mask.sum() <= parity_avail.sum():
+        return missing_mask
+    return np.zeros_like(missing_mask)
+
+
+def decode_cost(scheme, n_missing):
+    """Relative decode cost for reconstructing ``n_missing`` rows, in units
+    of one r=1 subtraction decode (the calibration point of
+    ``SimConfig.decode_ms``).  Schemes may provide their own
+    ``decode_cost(n_missing)``; the default models the r>1 masked
+    least-squares path as scaling linearly with the missing count."""
+    fn = getattr(scheme, "decode_cost", None)
+    if fn is not None:
+        return float(fn(n_missing))
+    return 1.0 if n_missing <= 1 else float(n_missing)
 
 
 def _pallas_encode(queries, coeffs, r):
@@ -179,6 +211,10 @@ class LinearScheme:
         mm = missing_mask.reshape((self.k,) + (1,) * (outs.ndim - 1))
         return jnp.where(mm, sol, outs)
 
+    # decode cost: linear schemes use the module-level ``decode_cost``
+    # default — one subtraction decode for a single missing row, the masked
+    # least-squares solve scaling with the missing count beyond that
+
 
 @dataclass(frozen=True)
 class ConcatScheme(LinearScheme):
@@ -213,13 +249,13 @@ class ReplicationScheme:
     machinery as ParM, which is the point of the registry."""
 
     k: int
-    r: int = 0                    # always k; 0 placeholder fixed in post_init
+    r: Optional[int] = None       # always k; None means "let me set it"
     backend: str = "jnp"
     name: str = "replication"
 
     def __post_init__(self):
         _check_backend(self.backend)
-        if self.r not in (0, self.k):
+        if self.r not in (None, self.k):
             raise ValueError(
                 f"replication scheme has r == k, got r={self.r} k={self.k}")
         object.__setattr__(self, "r", self.k)
@@ -257,6 +293,11 @@ class ReplicationScheme:
         """Per-row rule (vs the MDS all-or-nothing default): a missing row is
         recoverable iff its own replica arrived."""
         return np.asarray(missing_mask) & np.asarray(parity_avail)
+
+    def decode_cost(self, n_missing):
+        """Decode is a passthrough copy — effectively free."""
+        del n_missing
+        return 0.0
 
 
 # --------------------------------------------------------------- registry ---
@@ -328,5 +369,5 @@ register_scheme(
     "replication",
     # replication fixes r = k; accept and ignore the caller's r so generic
     # call sites (registry round-trip loops, frontends) need no special case
-    lambda k, r=1, backend="jnp", **kw: ReplicationScheme(
+    lambda k, r=None, backend="jnp", **kw: ReplicationScheme(
         k=k, backend=backend, **kw))

@@ -28,7 +28,8 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheme import get_scheme
+from repro.core.scheme import get_scheme, recoverable_rows
+from repro.serving.scenarios import get_scenario, instance_id
 from repro.serving.strategy import get_strategy
 
 
@@ -99,13 +100,25 @@ class ParMFrontend:
     def __init__(self, fwd, deployed_params, parity_params=None, *, k=2,
                  r=None, m=4, strategy="parm", scheme=None, backend=None,
                  mode=None, delay_fn=None, encode_fn=None, decode_fn=None,
-                 default_prediction=None, slo_ms=None, backup_params=None):
+                 default_prediction=None, slo_ms=None, backup_params=None,
+                 scenario=None, scenario_seed=0, scenario_time_scale=1.0,
+                 scenario_horizon_ms=600_000.0):
         """``r > 1`` (paper §3.5): ``parity_params`` is a list of r parity
         models, each trained to the j-th Vandermonde combination; r parity
         queries are dispatched per coding group and the decoder solves the
         linear system for up to r concurrent unavailabilities. ``r`` and
         ``backend`` default to the scheme's own values when a scheme
-        *instance* is passed; an explicit mismatch raises."""
+        *instance* is passed; an explicit mismatch raises.
+
+        ``scenario`` — a fault ``Scenario`` (instance or registered name from
+        ``repro.serving.scenarios``, e.g. ``"crash"``); its hazards are
+        realized once and injected as per-instance delays through the same
+        windows the DES applies, composing with any user ``delay_fn``.
+        ``scenario_time_scale`` maps scenario milliseconds to wall-clock
+        milliseconds (1.0 = real time); recurring hazards are realized out
+        to ``scenario_horizon_ms`` sim-ms, so injection stops after
+        ``scenario_horizon_ms * scenario_time_scale`` wall-clock ms —
+        raise it for longer experiments."""
         if mode is not None:
             warnings.warn(
                 "ParMFrontend(mode=...) is deprecated; use strategy=",
@@ -134,11 +147,28 @@ class ParMFrontend:
         self._early_outs = {}   # outputs that beat their group's assembly
 
         layout = self.strategy.layout(m, k, self.r)
+        if scenario is None:
+            scenario = self.strategy.scenario
+        self.scenario = None
+        if scenario is not None:
+            # fault-injection adapter: the scenario's hazard windows become
+            # per-instance delays, composed with any user delay_fn
+            self.scenario = get_scenario(scenario)
+            pool_sizes = {"main": layout.main}
+            if self.strategy.coded and layout.parity:
+                for j in range(self.r):
+                    pool_sizes[f"parity{j}"] = layout.parity
+            if layout.backup:
+                pool_sizes["backup"] = layout.backup
+            delay_fn = self.scenario.delay_fn(
+                pool_sizes, seed=scenario_seed,
+                horizon_ms=scenario_horizon_ms,
+                time_scale=scenario_time_scale, extra=delay_fn)
         self.main_q = queue.Queue()
         self.workers = []
         for i in range(layout.main):
-            w = ModelInstance(i, self.main_q, fwd, deployed_params,
-                              self._on_model_done, delay_fn)
+            w = ModelInstance(instance_id("main", i), self.main_q, fwd,
+                              deployed_params, self._on_model_done, delay_fn)
             w.start()
             self.workers.append(w)
         if self.strategy.coded:
@@ -155,7 +185,7 @@ class ParMFrontend:
                 pq = queue.Queue()
                 self.parity_qs.append(pq)
                 for i in range(layout.parity):
-                    w = ModelInstance(1000 + 100 * j + i, pq, fwd,
+                    w = ModelInstance(instance_id(f"parity{j}", i), pq, fwd,
                                       parity_params[j],
                                       self._on_parity_done, delay_fn)
                     w.start()
@@ -166,7 +196,8 @@ class ParMFrontend:
                 backup_params = deployed_params
             self.backup_q = queue.Queue()
             for i in range(layout.backup):
-                w = ModelInstance(2000 + i, self.backup_q, fwd, backup_params,
+                w = ModelInstance(instance_id("backup", i), self.backup_q,
+                                  fwd, backup_params,
                                   self._on_backup_done, delay_fn)
                 w.start()
                 self.workers.append(w)
@@ -253,15 +284,10 @@ class ParMFrontend:
         self.queries[qid].fulfill(out, "backup")
 
     def _recoverable(self, miss_mask, parity_avail):
-        """Which missing rows can be reconstructed now? Schemes may refine
-        this (replication: per-row replica arrival); the default is the MDS
-        rule — all-or-nothing while #missing <= #parities arrived."""
-        rec_fn = getattr(self.scheme, "recoverable", None)
-        if rec_fn is not None:
-            return np.asarray(rec_fn(miss_mask, parity_avail))
-        if miss_mask.sum() <= parity_avail.sum():
-            return miss_mask
-        return np.zeros_like(miss_mask)
+        """Which missing rows can be reconstructed now? Delegates to the
+        shared ``recoverable_rows`` rule — the same function the DES consults
+        — so the two serving layers cannot drift on decode decisions."""
+        return recoverable_rows(self.scheme, miss_mask, parity_avail)
 
     def _maybe_decode(self, gid, info):
         """Called with lock held: reconstruct up to ``n_parities_arrived``
@@ -337,6 +363,8 @@ class ParMFrontend:
             return float(np.percentile(lats, p)) if len(lats) else float("nan")
 
         return {"strategy": self.strategy.name,
+                "scheme": self.scheme.name if self.strategy.coded else None,
+                "scenario": self.scenario.name if self.scenario else None,
                 "median_ms": pct(50),
                 "p99_ms": pct(99),
                 "p999_ms": pct(99.9),

@@ -1,0 +1,422 @@
+"""Injectable fault scenarios shared by BOTH serving layers.
+
+A ``Scenario`` composes ``Hazard`` objects — instance crash/restart,
+correlated whole-pool slowdowns, the paper's §5.1 background network
+shuffles, bursty (Markov-modulated Poisson) arrivals, heterogeneous
+per-server service rates — into one declarative object that
+
+* the discrete-event simulator consumes natively
+  (``simulate(cfg, strategy, scenario=...)`` realizes the hazards into a
+  ``FaultPlan`` of per-pool/per-server slowdown windows), and
+* the threaded runtime consumes through a fault-injecting ``delay_fn``
+  adapter (``ParMFrontend(..., scenario=...)``), which maps worker instance
+  ids onto the same (pool, server) coordinates and sleeps through the same
+  windows in wall-clock time.
+
+Because one object drives both layers, a hazard added here is immediately
+runnable end-to-end through every registered (strategy x scheme) pair —
+the same anti-drift contract the strategy/scheme registries provide
+(DESIGN.md §6).
+
+Scenarios are registered like schemes and strategies::
+
+    register_scenario(Scenario("flaky", (InstanceCrash(), NetworkShuffles())))
+    simulate(cfg, "parm", scenario="flaky")
+    ParMFrontend(..., scenario="flaky")
+
+Built-ins: ``calm``, ``shuffle``, ``crash``, ``correlated_slowdown``,
+``bursty``, ``hetero``, ``storm`` (everything at once).
+
+All hazard times are in simulator milliseconds; the runtime adapter converts
+them to wall-clock seconds via ``time_scale`` (1.0 = one sim-ms per real ms).
+Multiplicative slowdowns apply only in the DES — the runtime runs real
+inference, whose duration the adapter cannot scale, so it injects the
+additive part (transfer delays, crash downtime) only.
+"""
+from __future__ import annotations
+
+import random as _random
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple, Union
+
+import numpy as np
+
+# Worker instance-id convention shared with ``repro.serving.runtime``:
+# main pool workers are 0..m-1, parity-queue j workers live at
+# 1000 + 100*j + i, backup workers at 2000 + i.
+MAIN_BASE = 0
+PARITY_BASE = 1000
+PARITY_STRIDE = 100
+BACKUP_BASE = 2000
+
+
+_MAX_PARITY_POOLS = (BACKUP_BASE - PARITY_BASE) // PARITY_STRIDE
+
+
+def instance_id(pool: str, server: int) -> int:
+    """(pool name, server index) -> the runtime's worker instance id.
+
+    The encoding has finite ranges (main < 1000, parity pools of up to 100
+    servers, at most 10 parity pools); out-of-range coordinates raise rather
+    than silently collide with another pool's ids."""
+    if pool == "main":
+        if not 0 <= server < PARITY_BASE - MAIN_BASE:
+            raise ValueError(f"main server index out of range: {server}")
+        return MAIN_BASE + server
+    if pool == "backup":
+        if server < 0:
+            raise ValueError(f"backup server index out of range: {server}")
+        return BACKUP_BASE + server
+    if pool.startswith("parity"):
+        j = int(pool[len("parity"):] or 0)
+        if not 0 <= j < _MAX_PARITY_POOLS:
+            raise ValueError(
+                f"at most {_MAX_PARITY_POOLS} parity pools encodable, "
+                f"got pool {pool!r}")
+        if not 0 <= server < PARITY_STRIDE:
+            raise ValueError(
+                f"at most {PARITY_STRIDE} servers per parity pool "
+                f"encodable, got server {server}")
+        return PARITY_BASE + PARITY_STRIDE * j + server
+    raise ValueError(f"unknown pool {pool!r}")
+
+
+def pool_of_iid(iid: int) -> Tuple[str, int]:
+    """Inverse of ``instance_id``."""
+    if iid >= BACKUP_BASE:
+        return "backup", iid - BACKUP_BASE
+    if iid >= PARITY_BASE:
+        off = iid - PARITY_BASE
+        return f"parity{off // PARITY_STRIDE}", off % PARITY_STRIDE
+    return "main", iid
+
+
+@dataclass(frozen=True)
+class Window:
+    """One realized hazard interval on (pool, server).
+
+    ``server == -1`` hits every server of the pool (correlated slowdown).
+    ``until_restart`` models a crash: a query dispatched at ``now`` inside
+    the window waits out the remaining downtime ``t1 - now`` before service
+    starts. Otherwise service time becomes ``base * mult + U[add_lo, add_hi]``.
+    """
+    pool: str
+    server: int
+    t0: float
+    t1: float
+    mult: float = 1.0
+    add_lo: float = 0.0
+    add_hi: float = 0.0
+    until_restart: bool = False
+
+
+class FaultPlan:
+    """Realized hazards: slowdown windows + static per-server rate
+    multipliers, queryable by (pool, server, time).
+
+    Windows are bucketed per (pool, server) — pool-wide windows under
+    server -1 — and each bucket keeps a cursor that skips expired entries:
+    lookups are called with (near-)monotonic ``now`` by both consumers (the
+    DES pops events in time order; the runtime adapter passes wall-clock),
+    so a long scenario never rescans its past."""
+
+    def __init__(self, windows: List[Window],
+                 rates: Dict[Tuple[str, int], float]):
+        self._buckets: Dict[Tuple[str, int], List[Window]] = {}
+        for w in windows:
+            self._buckets.setdefault((w.pool, w.server), []).append(w)
+        for ws in self._buckets.values():
+            ws.sort(key=lambda w: w.t0)
+        self._cursor = {key: 0 for key in self._buckets}
+        self.rates = rates
+        self.n_windows = len(windows)
+
+    def _active(self, pool, server, now):
+        for key in ((pool, server), (pool, -1)):
+            ws = self._buckets.get(key)
+            if not ws:
+                continue
+            i = self._cursor[key]
+            # drop leading windows that ended before ``now`` for good
+            while i < len(ws) and ws[i].t1 <= now:
+                i += 1
+            self._cursor[key] = i
+            for w in ws[i:]:
+                if w.t0 > now:
+                    break
+                if now < w.t1:
+                    yield w
+
+    def rate(self, pool, server) -> float:
+        return self.rates.get((pool, server), 1.0) * \
+            self.rates.get((pool, -1), 1.0)
+
+    def adjust_service_ms(self, pool, server, now, base_ms, rng) -> float:
+        """DES hook: service time of a query dispatched at ``now``."""
+        base_ms *= self.rate(pool, server)
+        for w in self._active(pool, server, now):
+            if w.until_restart:
+                base_ms += w.t1 - now
+            else:
+                base_ms = base_ms * w.mult + rng.uniform(w.add_lo, w.add_hi)
+        return base_ms
+
+    def injected_delay_ms(self, pool, server, now, rng) -> float:
+        """Runtime hook: additive delay only (real inference can't be
+        scaled), crash downtime included."""
+        extra = 0.0
+        for w in self._active(pool, server, now):
+            if w.until_restart:
+                extra += w.t1 - now
+            else:
+                extra += rng.uniform(w.add_lo, w.add_hi)
+        return extra
+
+
+def _recurring(rng, horizon_ms, first, dur_rng, gap_rng):
+    """Yield (t0, t1) windows of a recurring on/off process until horizon."""
+    t = first
+    while t <= horizon_ms:
+        dur = rng.uniform(*dur_rng)
+        yield t, t + dur
+        t += dur + rng.uniform(*gap_rng)
+
+
+def _target_pools(pool: str, pool_sizes: Dict[str, int]) -> List[str]:
+    if pool == "*":
+        return sorted(pool_sizes)
+    if pool == "parity*":
+        return sorted(p for p in pool_sizes if p.startswith("parity"))
+    if pool not in pool_sizes:
+        return []
+    return [pool]
+
+
+@dataclass(frozen=True)
+class NetworkShuffles:
+    """§5.1 background traffic: each of ``n_tenants`` repeatedly congests
+    the link of one randomly chosen instance; queries it serves meanwhile
+    pay an extra transfer delay."""
+    n_tenants: int = 4
+    duration_ms: tuple = (300.0, 700.0)
+    gap_ms: tuple = (800.0, 2400.0)
+    delay_ms: tuple = (10.0, 40.0)
+    slowdown: float = 1.0
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        windows = []
+        pools = sorted(pool_sizes)
+        for _ in range(self.n_tenants):
+            for t0, t1 in _recurring(rng, horizon_ms, rng.uniform(0, 50.0),
+                                     self.duration_ms, self.gap_ms):
+                pool = pools[rng.integers(len(pools))]
+                srv = int(rng.integers(pool_sizes[pool]))
+                windows.append(Window(pool, srv, t0, t1, mult=self.slowdown,
+                                      add_lo=self.delay_ms[0],
+                                      add_hi=self.delay_ms[1]))
+        return windows, {}
+
+
+@dataclass(frozen=True)
+class InstanceCrash:
+    """Crash/restart process per server: exponential time-between-failures,
+    uniform downtime. A query dispatched to a crashed server waits out the
+    remaining downtime (the runtime adapter sleeps it)."""
+    pool: str = "*"
+    mtbf_ms: float = 20_000.0
+    downtime_ms: tuple = (500.0, 2000.0)
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        windows = []
+        for pool in _target_pools(self.pool, pool_sizes):
+            for s in range(pool_sizes[pool]):
+                t = rng.exponential(self.mtbf_ms)
+                while t <= horizon_ms:
+                    down = rng.uniform(*self.downtime_ms)
+                    windows.append(Window(pool, s, t, t + down,
+                                          until_restart=True))
+                    t += down + rng.exponential(self.mtbf_ms)
+        return windows, {}
+
+
+@dataclass(frozen=True)
+class CorrelatedSlowdown:
+    """Recurring slowdowns that hit an entire pool at once (shared switch,
+    co-located noisy neighbor) — the failure mode replication-style schemes
+    are most sensitive to."""
+    pool: str = "*"                   # "*" = a random pool per event
+    duration_ms: tuple = (400.0, 900.0)
+    gap_ms: tuple = (1500.0, 4000.0)
+    delay_ms: tuple = (15.0, 50.0)
+    slowdown: float = 1.0
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        windows = []
+        pools = _target_pools(self.pool, pool_sizes)
+        if not pools:
+            return [], {}
+        for t0, t1 in _recurring(rng, horizon_ms, rng.uniform(0, 100.0),
+                                 self.duration_ms, self.gap_ms):
+            pool = pools[rng.integers(len(pools))]
+            windows.append(Window(pool, -1, t0, t1, mult=self.slowdown,
+                                  add_lo=self.delay_ms[0],
+                                  add_hi=self.delay_ms[1]))
+        return windows, {}
+
+
+@dataclass(frozen=True)
+class HeterogeneousRates:
+    """Static per-server service-rate spread (mixed hardware generations):
+    each server's mean service time is scaled by lognormal(0, sigma)."""
+    pool: str = "*"
+    sigma: float = 0.15
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        rates = {}
+        for pool in _target_pools(self.pool, pool_sizes):
+            for s in range(pool_sizes[pool]):
+                rates[(pool, s)] = float(np.exp(rng.normal(0.0, self.sigma)))
+        return [], rates
+
+
+@dataclass(frozen=True)
+class DeterministicSlowdown:
+    """Explicitly targeted slowdown windows — the building block of the
+    differential tests, where both serving layers must see the *same*
+    unavailability pattern."""
+    targets: tuple                    # of (pool, server)
+    add_ms: float = 1000.0
+    t0: float = 0.0
+    t1: float = float("inf")
+    mult: float = 1.0
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [Window(pool, server, self.t0, self.t1, mult=self.mult,
+                       add_lo=self.add_ms, add_hi=self.add_ms)
+                for pool, server in self.targets], {}
+
+
+@dataclass(frozen=True)
+class BurstyArrivals:
+    """Two-state Markov-modulated Poisson process (MMPP): calm periods at
+    the configured qps, bursts at ``burst_mult`` times it."""
+    burst_mult: float = 3.0
+    calm_ms: tuple = (2000.0, 6000.0)
+    burst_ms: tuple = (300.0, 1200.0)
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [], {}
+
+    def arrival_times(self, cfg, rng):
+        n = cfg.n_queries
+        times = np.empty(n)
+        i, t, burst = 0, 0.0, False
+        while i < n:
+            seg_end = t + rng.uniform(*(self.burst_ms if burst
+                                        else self.calm_ms))
+            rate = cfg.qps * (self.burst_mult if burst else 1.0)
+            while i < n:
+                nxt = t + rng.exponential(1000.0 / rate)
+                if nxt > seg_end:
+                    t = seg_end
+                    break
+                t = nxt
+                times[i] = t
+                i += 1
+            burst = not burst
+        return times
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, composable set of hazards consumed by both serving layers."""
+
+    name: str
+    hazards: tuple = field(default_factory=tuple)
+
+    def arrival_times(self, cfg, rng):
+        """Arrival process override, or None for the default Poisson."""
+        for h in self.hazards:
+            fn = getattr(h, "arrival_times", None)
+            if fn is not None:
+                return fn(cfg, rng)
+        return None
+
+    def realize(self, pool_sizes: Dict[str, int], horizon_ms: float,
+                rng) -> FaultPlan:
+        windows, rates = [], {}
+        for h in self.hazards:
+            w, rt = h.realize(pool_sizes, horizon_ms, rng)
+            windows.extend(w)
+            rates.update(rt)
+        return FaultPlan(windows, rates)
+
+    def delay_fn(self, pool_sizes: Dict[str, int], *, seed: int = 0,
+                 horizon_ms: float = 600_000.0, time_scale: float = 1.0,
+                 extra=None):
+        """Fault-injecting ``delay_fn(iid) -> seconds`` for the threaded
+        ``ParMFrontend``: realizes the hazards once, then maps each worker's
+        instance id to its (pool, server) window set by wall-clock time.
+        ``extra`` composes with a user-provided delay_fn (delays add).
+        ``random.Random`` is used for per-query jitter — its single-call
+        draws are safe under CPython's GIL for concurrent workers."""
+        plan = self.realize(pool_sizes, horizon_ms,
+                            np.random.default_rng(seed))
+        jitter = _random.Random(seed + 1)
+        origin = time.perf_counter()
+
+        class _Jitter:                   # FaultPlan expects rng.uniform(a, b)
+            uniform = staticmethod(jitter.uniform)
+
+        def fn(iid):
+            pool, server = pool_of_iid(iid)
+            now_ms = (time.perf_counter() - origin) * 1e3 / time_scale
+            d = plan.injected_delay_ms(pool, server, now_ms, _Jitter)
+            d_s = d * time_scale / 1e3
+            if extra is not None:
+                d_s += extra(iid)
+            return d_s
+
+        return fn
+
+
+# --------------------------------------------------------------- registry ---
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    """Register a scenario instance under its ``name``."""
+    _SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def available_scenarios():
+    return sorted(_SCENARIOS)
+
+
+def get_scenario(scenario: Union[str, Scenario]) -> Scenario:
+    """Resolve a name (or pass an instance through)."""
+    if isinstance(scenario, Scenario):
+        return scenario
+    if isinstance(scenario, str):
+        if scenario not in _SCENARIOS:
+            raise KeyError(
+                f"unknown scenario {scenario!r}; registered: "
+                f"{available_scenarios()}")
+        return _SCENARIOS[scenario]
+    raise TypeError(f"not a Scenario or registered name: {scenario!r}")
+
+
+register_scenario(Scenario("calm"))
+register_scenario(Scenario("shuffle", (NetworkShuffles(),)))
+register_scenario(Scenario("crash", (InstanceCrash(),)))
+register_scenario(Scenario("correlated_slowdown", (CorrelatedSlowdown(),)))
+register_scenario(Scenario("bursty", (BurstyArrivals(),
+                                      NetworkShuffles(n_tenants=2))))
+register_scenario(Scenario("hetero", (HeterogeneousRates(),
+                                      NetworkShuffles(n_tenants=2))))
+register_scenario(Scenario("storm", (NetworkShuffles(),
+                                     InstanceCrash(mtbf_ms=40_000.0),
+                                     CorrelatedSlowdown(),
+                                     BurstyArrivals(burst_mult=2.0))))

@@ -14,6 +14,22 @@ either an instance or a registered name (``parm``, ``equal_resources``,
 owns pool layout (the paper's m + m/k apples-to-apples budget, §5.1), group
 assembly and on-unavailability behavior, and a strategy registered from any
 other file runs here untouched.
+
+Codes are ``CodingScheme`` objects resolved through ``get_scheme`` — again
+the same objects ``ParMFrontend`` serves.  For a coded strategy the DES runs
+one parity pool per parity model (r pools, paper §3.5), and reconstruction
+follows the scheme's own recoverability rule via the shared
+``recoverable_rows`` (MDS all-or-nothing for linear codes: up to r concurrent
+unavailabilities per group; per-row replica arrival for replication), with
+decode latency scaled by the scheme's ``decode_cost`` hint for the r>1
+least-squares path.
+
+Fault injection beyond the built-in shuffle load comes from ``Scenario``
+objects (``repro.serving.scenarios``): ``simulate(cfg, strategy,
+scenario="crash")`` realizes the scenario's hazards — instance crash/restart,
+correlated pool slowdowns, bursty MMPP arrivals, heterogeneous service rates
+— into per-server slowdown windows.  With ``scenario=None`` the legacy
+cfg-driven shuffle process runs unchanged.
 """
 from __future__ import annotations
 
@@ -23,6 +39,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.scheme import decode_cost, get_scheme, recoverable_rows
+from repro.serving.scenarios import get_scenario
 from repro.serving.strategy import get_strategy
 
 
@@ -30,6 +48,8 @@ from repro.serving.strategy import get_strategy
 class SimConfig:
     m: int = 12                     # deployed-model instances
     k: int = 2                      # coding-group size (redundancy 1/k)
+    r: int = 1                      # parity models per group (paper §3.5);
+                                    # schemes may fix their own (replication)
     qps: float = 270.0
     n_queries: int = 100_000
     service_ms: float = 25.0        # mean inference time (ResNet-18 on K80)
@@ -43,7 +63,8 @@ class SimConfig:
     shuffle_delay_ms: tuple = (10.0, 40.0)   # added per-query delay when slow
     shuffle_slowdown: float = 1.0        # optional multiplicative part
     encode_ms: float = 0.153        # paper §5.2.5 (k=3 median), in ms
-    decode_ms: float = 0.014
+    decode_ms: float = 0.014        # one r=1 subtraction decode; multi-row
+                                    # decodes pay scheme.decode_cost() times it
     approx_speedup: float = 1.15    # §5.2.6, GPU cluster value
     slo_ms: float = 200.0           # default-prediction deadline (default_slo)
     batch_size: int = 1             # §5.2.3; batched service is sublinear
@@ -64,7 +85,8 @@ class _Event:
 class _Pool:
     """Single-queue pool of n servers with per-server slowdown windows."""
 
-    def __init__(self, n, rng, cfg, mean_ms):
+    def __init__(self, name, n, rng, cfg, mean_ms):
+        self.name = name
         self.n = n
         self.free = list(range(n))
         self.queue = []
@@ -72,6 +94,7 @@ class _Pool:
         self.cfg = cfg
         self.mean = mean_ms
         self.slow_until = np.zeros(n)
+        self.plan = None                # FaultPlan from a Scenario, if any
         self.sigma = math.sqrt(math.log(1 + cfg.service_cv ** 2))
         self.mu = math.log(mean_ms) - self.sigma ** 2 / 2
 
@@ -83,6 +106,9 @@ class _Pool:
         if now < self.slow_until[server]:
             base = base * self.cfg.shuffle_slowdown + \
                 self.rng.uniform(*self.cfg.shuffle_delay_ms)
+        if self.plan is not None:
+            base = self.plan.adjust_service_ms(self.name, server, now, base,
+                                               self.rng)
         return base
 
     def submit(self, item):
@@ -98,31 +124,55 @@ class _Pool:
         return out
 
 
-def simulate(cfg: SimConfig, strategy="parm"):
+def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
     """Run the DES under a ``ResilienceStrategy`` (instance or registered
-    name).  Returns dict with latency percentiles and bookkeeping."""
+    name).  ``scheme`` (instance or name) overrides the strategy's default
+    code for coded strategies; ``scenario`` (instance or name) overrides the
+    built-in shuffle background load with a hazard set from
+    ``repro.serving.scenarios``.  Returns dict with latency percentiles and
+    bookkeeping."""
     strat = get_strategy(strategy)
     rng = np.random.default_rng(cfg.seed)
     k = cfg.k
-    layout = strat.layout(cfg.m, k)
-    pools = {"main": _Pool(layout.main, rng, cfg, cfg.service_ms)}
+    schm = None
+    r = cfg.r
+    if strat.coded:
+        want = scheme if scheme is not None else (strat.scheme or "sum")
+        # cfg.r sizes registry-name schemes; an instance carries its own r
+        # (mirrors ParMFrontend, which defaults r to the instance's value)
+        schm = get_scheme(want, k=k,
+                          r=cfg.r if isinstance(want, str) else None)
+        r = schm.r                          # a scheme may fix its own r
+    layout = strat.layout(cfg.m, k, r)
+    pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms)}
     if layout.parity:
-        pools["parity"] = _Pool(layout.parity, rng, cfg, cfg.service_ms)
+        for j in range(r):
+            pools[f"parity{j}"] = _Pool(f"parity{j}", layout.parity, rng,
+                                        cfg, cfg.service_ms)
     if layout.backup:
-        pools["backup"] = _Pool(layout.backup, rng, cfg,
+        pools["backup"] = _Pool("backup", layout.backup, rng, cfg,
                                 cfg.service_ms / cfg.approx_speedup)
 
-    # pre-draw arrivals
-    arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, cfg.n_queries))
+    # pre-draw arrivals (a scenario may replace Poisson with MMPP bursts)
+    scen = None
+    if scenario is None:
+        scenario = strat.scenario
+    arrivals = None
+    if scenario is not None:
+        scen = get_scenario(scenario)
+        arrivals = scen.arrival_times(cfg, rng)
+    if arrivals is None:
+        arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, cfg.n_queries))
     latency = np.full(cfg.n_queries, np.inf)
     arrival_t = arrivals.copy()
     done = np.zeros(cfg.n_queries, bool)
 
-    # coding-group bookkeeping (coded strategies only)
+    # coding-group bookkeeping (coded strategies only); member availability
+    # is read off ``done`` — a reconstructed member counts as available for
+    # the next decode decision, exactly as in the runtime's _maybe_decode
     group_of = np.arange(cfg.n_queries) // k
     n_groups = (cfg.n_queries + k - 1) // k
-    group_parity_t = np.full(n_groups, np.inf)      # parity output ready
-    group_member_t = np.full((n_groups, k), np.inf)
+    group_parity_t = np.full((n_groups, max(r, 1)), np.inf)  # parity ready
 
     events = []
     seq = 0
@@ -135,23 +185,32 @@ def simulate(cfg: SimConfig, strategy="parm"):
     for i, t in enumerate(arrivals):
         push(t, "arrive", i)
 
-    # background shuffles: a recurring process that slows random instances
-    all_pools = list(pools.values())
-
     end_of_arrivals = arrivals[-1]
 
-    def schedule_shuffle(t0):
-        if t0 > end_of_arrivals:          # stop background load after arrivals
-            return
-        dur = rng.uniform(*cfg.shuffle_ms)
-        pool = all_pools[rng.integers(len(all_pools))]
-        srv = rng.integers(pool.n)
-        pool.slow_until[srv] = max(pool.slow_until[srv], t0 + dur)
-        # next shuffle of this "tenant" after an idle gap
-        push(t0 + dur + rng.uniform(*cfg.shuffle_gap_ms), "shuffle", None)
+    if scen is not None:
+        # scenario-owned hazards: realize crash/slowdown/heterogeneity
+        # windows over the arrival horizon; the legacy shuffle process is off
+        plan = scen.realize({name: p.n for name, p in pools.items()},
+                            end_of_arrivals, rng)
+        for p in pools.values():
+            p.plan = plan
+    else:
+        # legacy background shuffles: a recurring process that slows random
+        # instances, driven by the cfg.shuffle_* fields
+        all_pools = list(pools.values())
 
-    for j in range(cfg.n_shuffles):
-        schedule_shuffle(rng.uniform(0, 50.0))
+        def schedule_shuffle(t0):
+            if t0 > end_of_arrivals:      # stop background load after arrivals
+                return
+            dur = rng.uniform(*cfg.shuffle_ms)
+            pool = all_pools[rng.integers(len(all_pools))]
+            srv = rng.integers(pool.n)
+            pool.slow_until[srv] = max(pool.slow_until[srv], t0 + dur)
+            # next shuffle of this "tenant" after an idle gap
+            push(t0 + dur + rng.uniform(*cfg.shuffle_gap_ms), "shuffle", None)
+
+        for j in range(cfg.n_shuffles):
+            schedule_shuffle(rng.uniform(0, 50.0))
 
     def dispatch(pool_name, now):
         pool = pools[pool_name]
@@ -166,17 +225,27 @@ def simulate(cfg: SimConfig, strategy="parm"):
                 nonlocal_counter[0] += 1
 
     def maybe_reconstruct(g, t):
-        """When parity + (k-1) members are in, the straggler's prediction can
-        be decoded; all group members are then completable."""
-        mt = np.sort(group_member_t[g])
-        if not np.isfinite(group_parity_t[g]) or not np.isfinite(mt[-2]):
-            return
-        ready = max(group_parity_t[g], mt[-2]) + cfg.decode_ms
+        """Reconstruct every member the scheme can recover *right now*: the
+        shared ``recoverable_rows`` rule over (members still unavailable,
+        parities arrived) — the exact decision ``ParMFrontend._maybe_decode``
+        takes, so the two layers agree on recoverability by construction."""
         base = g * k
-        for j in range(k):
-            qi = base + j
-            if qi < cfg.n_queries and not done[qi]:
-                complete(qi, max(ready, arrival_t[qi]), reconstructed=True)
+        if base + k > cfg.n_queries:
+            return          # partial trailing group: the runtime never
+                            # encodes one, so the DES doesn't decode one
+        miss = ~done[base:base + k]
+        if not miss.any():
+            return
+        parity_avail = np.isfinite(group_parity_t[g, :r])
+        if not parity_avail.any():
+            return
+        rows = recoverable_rows(schm, miss, parity_avail)
+        if not rows.any():
+            return
+        ready = t + cfg.decode_ms * decode_cost(schm, int(rows.sum()))
+        for j in np.nonzero(rows)[0]:
+            qi = base + int(j)
+            complete(qi, max(ready, arrival_t[qi]), reconstructed=True)
 
     nonlocal_counter = [0]
 
@@ -188,14 +257,14 @@ def simulate(cfg: SimConfig, strategy="parm"):
             for _ in range(strat.mirror):
                 pools["main"].submit(("q", qi))
             dispatch("main", t)
-            if strat.coded:
+            if strat.coded and qi % k == k - 1:
+                # group complete -> encode + dispatch r parity queries, one
+                # per parity model (§3.5); encoding happens on the frontend,
+                # so model its cost as added latency on each parity path
                 g = group_of[qi]
-                if (qi % k == k - 1) or qi == cfg.n_queries - 1:
-                    # group complete -> encode + dispatch parity query
-                    pools["parity"].submit(("p", g))
-                    # encoding happens on the frontend; model the cost as
-                    # added latency on the parity path
-                    dispatch("parity", t + cfg.encode_ms)
+                for j in range(r):
+                    pools[f"parity{j}"].submit(("p", (g, j)))
+                    dispatch(f"parity{j}", t + cfg.encode_ms)
             if strat.backup:
                 pools["backup"].submit(("q", qi))
                 dispatch("backup", t)
@@ -208,13 +277,11 @@ def simulate(cfg: SimConfig, strategy="parm"):
             if kind == "q":
                 complete(idx, t)
                 if strat.coded:
-                    g = group_of[idx]
-                    group_member_t[g, idx - g * k] = min(
-                        group_member_t[g, idx - g * k], t)
-                    maybe_reconstruct(g, t)
-            else:  # parity output
-                group_parity_t[idx] = min(group_parity_t[idx], t)
-                maybe_reconstruct(idx, t)
+                    maybe_reconstruct(group_of[idx], t)
+            else:  # parity output (g, j)
+                g, j = idx
+                group_parity_t[g, j] = min(group_parity_t[g, j], t)
+                maybe_reconstruct(g, t)
             dispatch(pool_name, t)
         elif ev.kind == "slo":
             # Clipper baseline: answer with the default prediction at the
@@ -228,6 +295,8 @@ def simulate(cfg: SimConfig, strategy="parm"):
         f"unanswered queries: {cfg.n_queries - len(lat)}"
     return {
         "strategy": strat.name,
+        "scheme": schm.name if schm is not None else None,
+        "scenario": scen.name if scen is not None else None,
         "median_ms": float(np.percentile(lat, 50)),
         "p99_ms": float(np.percentile(lat, 99)),
         "p999_ms": float(np.percentile(lat, 99.9)),

@@ -30,6 +30,11 @@ instance budget, §5.1):
 
 New strategies plug in with ``register_strategy`` from any file and are then
 runnable end-to-end through ``ParMFrontend`` and ``simulate`` untouched.
+
+A strategy may also pin a default fault ``scenario`` (a registered name from
+``repro.serving.scenarios``); both serving layers resolve it when the caller
+does not pass one explicitly, so a strategy can declare the hazard regime it
+is meant to be evaluated under.
 """
 from __future__ import annotations
 
@@ -57,6 +62,10 @@ class ResilienceStrategy:
     slo_default: bool = False    # fulfill with the default prediction at SLO
     extra_main: bool = False     # spend the redundancy budget on main pool
     scheme: Optional[str] = None  # default CodingScheme name (coded only)
+    scenario: Optional[str] = None  # default fault Scenario name; None means
+                                    # each serving layer's own default (the
+                                    # DES's legacy shuffle load, no injection
+                                    # in the threaded runtime)
 
     def n_redundant(self, m: int, k: int) -> int:
         """The paper's redundancy budget: m/k instances (at least 1)."""

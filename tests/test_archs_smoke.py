@@ -13,6 +13,9 @@ from repro.models import transformer as T
 from repro.training.optim import AdamConfig, adam_init
 from repro.training.train_lib import make_train_step
 
+# ~40s of per-arch compile+step work: full-suite lane only
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

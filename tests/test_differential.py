@@ -1,0 +1,219 @@
+"""Differential battery: the anti-drift contract of DESIGN.md §1.
+
+Both serving layers — the threaded ``ParMFrontend`` and the DES
+``simulate`` — consume the same ``ResilienceStrategy`` / ``CodingScheme`` /
+``Scenario`` objects.  These tests drive the SAME unavailability pattern
+through both layers for every registered strategy (and for coded strategies,
+every relevant scheme including the r=2 Vandermonde code and replication)
+and assert they make the same recoverability decision and perform the same
+number of reconstructions.
+
+The pattern is expressed once as a ``Scenario`` of ``DeterministicSlowdown``
+hazards on (pool, server) coordinates; the DES applies it as service-time
+windows and the runtime applies it through the fault-injecting ``delay_fn``
+adapter — so the test also proves the adapter maps instance ids onto the
+same coordinates the simulator uses.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.runtime import ParMFrontend
+from repro.serving.scenarios import DeterministicSlowdown, Scenario
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.strategy import available_strategies, get_strategy
+
+# wall-clock / sim-ms straggle budget: members straggle for MEMBER_MS, lost
+# parity models for PARITY_MS (long enough that an unrecoverable group
+# completes via its members first, so no late decode sneaks in).  Every
+# other main server gets BASE_MS: with k queries submitted back-to-back and
+# every worker busy for >= BASE_MS, each of the runtime's k main workers
+# deterministically serves exactly one group member — the same one-member-
+# per-server assignment the DES's free-list dispatch produces.
+MEMBER_MS = 700.0
+PARITY_MS = 1800.0
+BASE_MS = 150.0
+
+
+def _pattern_scenario(k, slow_main, slow_parity_pools):
+    hazards = []
+    slow = tuple(("main", s) for s in slow_main)
+    base = tuple(("main", s) for s in range(k) if s not in slow_main)
+    lost = tuple((f"parity{j}", 0) for j in slow_parity_pools)
+    if slow:
+        hazards.append(DeterministicSlowdown(targets=slow, add_ms=MEMBER_MS))
+    if base:
+        hazards.append(DeterministicSlowdown(targets=base, add_ms=BASE_MS))
+    if lost:
+        hazards.append(DeterministicSlowdown(targets=lost, add_ms=PARITY_MS))
+    return Scenario("diff-pattern", tuple(hazards))
+
+
+def _run_runtime(scheme, k, r, scenario, n=None):
+    """One coding group (k queries) through the threaded frontend with
+    m = k main instances (one per member) and 1 instance per parity pool."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+
+    def fwd(p, x):
+        return x @ p
+
+    # linear deployed model: W itself is an exact parity model for ANY
+    # linear combination, so every Vandermonde row is served exactly
+    parity_params = None if scheme == "replication" else \
+        [W] * (r if r else 1)
+    fe = ParMFrontend(fwd, W, parity_params=parity_params, k=k, r=r, m=k,
+                      strategy="parm", scheme=scheme, scenario=scenario)
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32)
+              for _ in range(n or k)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+                                       atol=1e-2)
+        return fe.stats()
+    finally:
+        fe.shutdown()
+
+
+def _run_sim(scheme, k, r, scenario, n=None):
+    """The same single coding group through the DES: m = k main servers, so
+    each member lands on its own server, exactly like the runtime above."""
+    cfg = SimConfig(n_queries=n or k, qps=1000.0, m=k, k=k,
+                    r=r if r else 1, seed=0, n_shuffles=0)
+    return simulate(cfg, "parm", scheme=scheme, scenario=scenario)
+
+
+# (scheme, k, r, slow main servers, slow parity pools,
+#  expected reconstructions, in_time) — ``in_time`` is the recoverability
+# *decision*: whether the pattern decodes before the stragglers return.
+# When it doesn't, both layers still agree on the late behavior: as soon as
+# enough member outputs arrive, the remaining stragglers become decodable
+# and ARE reconstructed (late), identically in runtime and DES.
+CODED_CASES = [
+    # r=1 addition code: one straggler decodes in time; two exceed the MDS
+    # budget, so the group only decodes the 2nd straggler after the 1st
+    # returns on its own
+    ("sum", 2, 1, (0,), (), 1, True),
+    ("sum", 2, 1, (0, 1), (), 1, False),
+    # r=2 Vandermonde (§3.5): TWO concurrent stragglers in ONE group decode
+    ("sum", 2, 2, (0, 1), (), 2, True),
+    # ... but not when one of the two parity models is itself lost — the
+    # group waits out one straggler, then late-decodes the other
+    ("sum", 2, 2, (0, 1), (1,), 1, False),
+    # one straggler + one lost parity still decodes from the survivor
+    ("sum", 2, 2, (0,), (0,), 1, True),
+    ("sum", 3, 2, (0, 1), (), 2, True),
+    # replication-as-a-scheme: per-row rule — a member is recoverable iff
+    # its OWN replica pool delivered
+    ("replication", 2, None, (0, 1), (), 2, True),
+    ("replication", 2, None, (0, 1), (0,), 1, False),
+    ("replication", 2, None, (0, 1), (0, 1), 0, False),
+]
+
+
+@pytest.mark.parametrize("scheme,k,r,slow_main,slow_par,expected,in_time",
+                         CODED_CASES,
+                         ids=[f"{c[0]}-k{c[1]}-r{c[2]}-m{len(c[3])}-p{len(c[4])}"
+                              for c in CODED_CASES])
+def test_runtime_and_simulator_agree_on_recoverability(
+        scheme, k, r, slow_main, slow_par, expected, in_time):
+    scen = _pattern_scenario(k, slow_main, slow_par)
+    sim = _run_sim(scheme, k, r, scen)
+    rt = _run_runtime(scheme, k, r, scen)
+    # identical reconstruction counts and identical recoverability decision
+    assert sim["reconstructions"] == expected, sim
+    assert rt["reconstructions"] == expected, rt
+    assert (sim["reconstructions"] > 0) == (rt["reconstructions"] > 0)
+    if in_time:
+        # every straggler was decoded before it returned, in both layers
+        assert sim["p999_ms"] < MEMBER_MS, sim
+        assert any(c == "parity" for c in _completions(rt))
+    else:
+        # the pattern was not recoverable in time: the straggle shows in the
+        # tail of both layers
+        assert sim["max_ms"] >= MEMBER_MS, sim
+        assert rt["max_ms"] >= MEMBER_MS * 0.9, rt  # wall-clock jitter
+
+
+def _completions(stats):
+    return [k for k, v in stats["completed_by"].items() for _ in range(v)]
+
+
+def test_noncoded_strategies_never_reconstruct():
+    """Every registered non-coded strategy must agree across both layers:
+    zero reconstructions, all queries answered, under the same slowdown."""
+    scen = Scenario("diff-noncoded",
+                    (DeterministicSlowdown(targets=(("main", 0),),
+                                           add_ms=400.0),))
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    for name in available_strategies():
+        strat = get_strategy(name)
+        if strat.coded:
+            continue
+        sim = simulate(SimConfig(n_queries=4, qps=500.0, m=2, k=2, seed=0,
+                                 n_shuffles=0), name, scenario=scen)
+        assert sim["reconstructions"] == 0, name
+        fe = ParMFrontend(lambda p, x: x @ p, W, k=2, m=2, strategy=name,
+                          scenario=scen)
+        try:
+            qs = [fe.submit(i, np.ones((1, 4), np.float32))
+                  for i in range(4)]
+            assert fe.wait_all(timeout=15), name
+            st = fe.stats()
+            assert st["reconstructions"] == 0, (name, st)
+            assert st["n"] == 4, (name, st)
+        finally:
+            fe.shutdown()
+
+
+def test_simulator_resolves_schemes_through_registry():
+    """simulate() must go through get_scheme — unknown names fail fast and
+    the resolved scheme's identity is reported."""
+    cfg = SimConfig(n_queries=100, qps=200, m=4, k=2, seed=0)
+    with pytest.raises(KeyError, match="unknown coding scheme"):
+        simulate(cfg, "parm", scheme="nope")
+    r = simulate(cfg, "parm", scheme="replication")
+    assert r["scheme"] == "replication"
+    assert simulate(cfg, "parm")["scheme"] == "sum"   # strategy default
+    assert simulate(cfg, "none")["scheme"] is None    # non-coded: no scheme
+    # a scheme INSTANCE carries its own r and must pass through even when it
+    # differs from cfg.r — the same contract ParMFrontend honors
+    from repro.core.scheme import get_scheme
+    for inst in (get_scheme("replication", k=2), get_scheme("sum", k=2, r=2)):
+        r = simulate(cfg, "parm", scheme=inst)
+        assert r["scheme"] == inst.name
+
+
+def test_instance_id_round_trips_and_rejects_collisions():
+    """The shared (pool, server) <-> instance-id mapping must be a bijection
+    over its encodable range and refuse coordinates that would collide."""
+    from repro.serving.scenarios import instance_id, pool_of_iid
+    for pool, server in [("main", 0), ("main", 999), ("parity0", 0),
+                         ("parity1", 99), ("parity9", 5), ("backup", 3)]:
+        assert pool_of_iid(instance_id(pool, server)) == (pool, server)
+    with pytest.raises(ValueError, match="parity pool"):
+        instance_id("parity0", 100)       # would alias parity1 server 0
+    with pytest.raises(ValueError, match="parity pools"):
+        instance_id("parity10", 0)        # would alias backup server 0
+    with pytest.raises(ValueError, match="out of range"):
+        instance_id("main", 1000)         # would alias parity0 server 0
+
+
+def test_every_strategy_scheme_scenario_combination_runs():
+    """Smoke the full registered cross-product through the DES (the runtime
+    end of each axis is covered by the targeted tests above): every
+    (strategy x scheme x scenario) combination must complete all queries."""
+    from repro.core.scheme import available_schemes
+    from repro.serving.scenarios import available_scenarios
+    cfg = SimConfig(n_queries=200, qps=300, m=4, k=4, seed=1)
+    for strat_name in available_strategies():
+        coded = get_strategy(strat_name).coded
+        schemes = available_schemes() if coded else [None]
+        for scheme in schemes:
+            for scen in available_scenarios():
+                r = simulate(cfg, strat_name, scheme=scheme, scenario=scen)
+                assert r["strategy"] == strat_name
+                assert np.isfinite(r["p999_ms"]), (strat_name, scheme, scen)

@@ -8,6 +8,9 @@ from repro.configs.base import get_config
 from repro.models import mamba as M
 from repro.models import moe as MOE
 
+# ~20s of SSD/MoE reference sweeps: full-suite lane only
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -121,6 +121,101 @@ def test_backend_equivalence_decode_one(k, B, V):
                                    atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("k,r", [(2, 2), (3, 2), (4, 3)])
+def test_backend_equivalence_masked_decode_partial_parity(k, r):
+    """The general least-squares decode with a straggling parity model
+    (partial ``parity_avail``) must be bitwise-close across backends — the
+    pallas backend routes encode/decode_one through kernels but decode
+    through the same jnp solve, and must not drift."""
+    rng = np.random.default_rng(k * 7 + r)
+    jnp_s = get_scheme("sum", k=k, r=r, backend="jnp")
+    pal_s = get_scheme("sum", k=k, r=r, backend="pallas")
+    outs_true = rng.normal(size=(k, 2, 7)).astype(np.float32)
+    parity = np.einsum("rk,k...->r...", np.asarray(jnp_s.coeffs), outs_true)
+    miss = np.zeros(k, bool)
+    miss[0] = True
+    pa = np.ones(r, bool)
+    pa[-1] = False                       # last parity model straggles
+    corrupted = np.where(miss[:, None, None], 99.0, outs_true)
+    a = np.asarray(jnp_s.decode(jnp.asarray(parity), jnp.asarray(corrupted),
+                                jnp.asarray(miss), jnp.asarray(pa)))
+    b = np.asarray(pal_s.decode(jnp.asarray(parity), jnp.asarray(corrupted),
+                                jnp.asarray(miss), jnp.asarray(pa)))
+    np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(b, outs_true, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(3, 100), (3, 2, 257), (2, 2, 4, 4, 10)])
+def test_backend_equivalence_decode_one_shapes(shape):
+    """decode_one across the pallas reshape paths: unbatched [k, F], batched
+    [k, B, F], and higher-rank [k, B, H, W, C] outputs."""
+    k = shape[0]
+    rng = np.random.default_rng(sum(shape))
+    outs = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    par = jnp.asarray(rng.normal(size=shape[1:]).astype(np.float32))
+    jnp_s = get_scheme("sum", k=k, r=1, backend="jnp")
+    pal_s = get_scheme("sum", k=k, r=1, backend="pallas")
+    for j in range(k):
+        np.testing.assert_allclose(
+            np.asarray(jnp_s.decode_one(par, outs, j)),
+            np.asarray(pal_s.decode_one(par, outs, j)),
+            atol=1e-4, rtol=1e-4)
+
+
+def test_concat_grid_divisibility_edge_cases():
+    """§4.2.3 grid code: g = ceil(sqrt(k)); H and W must divide by g —
+    non-square k values and indivisible shapes are the edge cases."""
+    # k=3 -> 2x2 grid: 16x16 divides, 15x15 must fail fast
+    s3 = get_scheme("concat", k=3)
+    p = s3.encode(jnp.ones((3, 2, 16, 16, 1)))
+    assert p.shape == (1, 2, 16, 16, 1)
+    with pytest.raises(ValueError, match="divisible"):
+        s3.encode(jnp.ones((3, 2, 15, 15, 1)))
+    # k=5 -> 3x3 grid: 15x15 divides by 3, 16x16 does not
+    s5 = get_scheme("concat", k=5)
+    assert s5.encode(jnp.ones((5, 1, 15, 15, 2))).shape == (1, 1, 15, 15, 2)
+    with pytest.raises(ValueError, match="divisible"):
+        s5.encode(jnp.ones((5, 1, 16, 16, 2)))
+    # r > 1 is rejected at construction, not mid-serve
+    with pytest.raises(ValueError, match="r=1"):
+        get_scheme("concat", k=2, r=2)
+
+
+def test_concat_pallas_backend_decode_matches_jnp():
+    """ConcatScheme's *output* code is still addition, so its decode_one on
+    the pallas backend rides the subtraction kernel; results must match the
+    jnp backend bitwise-close."""
+    k = 4
+    rng = np.random.default_rng(0)
+    outs = jnp.asarray(rng.normal(size=(k, 2, 10)).astype(np.float32))
+    par = jnp.asarray(outs.sum(0))        # ideal parity output for coeffs 1
+    jnp_s = get_scheme("concat", k=k, backend="jnp")
+    pal_s = get_scheme("concat", k=k, backend="pallas")
+    for j in range(k):
+        a = np.asarray(jnp_s.decode_one(par, outs, j))
+        b = np.asarray(pal_s.decode_one(par, outs, j))
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(a, np.asarray(outs[j]), atol=1e-4)
+    # encode is the (jnp) grid downsample on both backends
+    q = jnp.asarray(rng.normal(size=(k, 1, 8, 8, 1)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(jnp_s.encode(q)),
+                               np.asarray(pal_s.encode(q)), atol=1e-6)
+
+
+def test_replication_scheme_accepts_r_none_and_validates():
+    """The r=0 placeholder wart is gone: construction takes r=None (or the
+    true r=k); anything else is rejected."""
+    from repro.core.scheme import ReplicationScheme
+    assert ReplicationScheme(k=3).r == 3
+    assert ReplicationScheme(k=3, r=3).r == 3
+    with pytest.raises(ValueError, match="r == k"):
+        ReplicationScheme(k=3, r=2)
+    with pytest.raises(ValueError, match="r == k"):
+        ReplicationScheme(k=3, r=0)      # the old placeholder is invalid now
+    # registry round-trip still ignores the generic caller's r
+    assert get_scheme("replication", k=4, r=1).r == 4
+
+
 # --------------------------------------------- r=2, straggling parity ------
 def test_r2_decode_with_straggling_parity_instance():
     """§3.5 with a parity straggler: decode is exact whenever #available

@@ -41,6 +41,7 @@ def test_des_every_registered_strategy_runs():
         assert np.isfinite(r["p999_ms"])
 
 
+@pytest.mark.slow
 def test_des_parm_beats_equal_resources_tail():
     cfg = SimConfig(n_queries=50_000, qps=270, m=12, k=2, seed=3)
     parm = simulate(cfg, "parm")
@@ -64,6 +65,57 @@ def test_des_no_background_load_no_tail():
                     n_shuffles=0)
     r = simulate(cfg, "none")
     assert r["p999_ms"] < 2.5 * r["median_ms"]
+
+
+def test_des_same_seed_is_deterministic():
+    """Same SimConfig (same seed) ⇒ bit-identical percentile dict, on both
+    the legacy shuffle path and the scenario path."""
+    cfg = SimConfig(n_queries=5000, qps=270, m=12, k=2, seed=42)
+    assert simulate(cfg, "parm") == simulate(cfg, "parm")
+    assert simulate(cfg, "parm", scenario="storm") == \
+        simulate(cfg, "parm", scenario="storm")
+    assert simulate(cfg, "parm") != simulate(
+        SimConfig(n_queries=5000, qps=270, m=12, k=2, seed=43), "parm")
+
+
+def test_des_parm_tail_beats_none_under_shuffle_load():
+    """Fast-lane sanity (small n): under background shuffles ParM closes the
+    tail of the unprotected baseline and actually reconstructs."""
+    cfg = SimConfig(n_queries=5000, qps=270, m=12, k=2, seed=0)
+    parm = simulate(cfg, "parm")
+    none = simulate(cfg, "none")
+    assert parm["p999_ms"] < none["p999_ms"]
+    assert parm["reconstructions"] > 0
+
+
+def test_des_r2_runs_two_parity_pools_and_reconstructs():
+    """r=2 (§3.5) through the DES: the strategy's layout is sized for two
+    parity pools and reconstruction still fires."""
+    cfg = SimConfig(n_queries=5000, qps=270, m=12, k=2, r=2, seed=0)
+    r2 = simulate(cfg, "parm")
+    assert r2["scheme"] == "sum"
+    assert r2["reconstructions"] > 0
+    # the apples-to-apples budget grows with r in the layout the DES uses
+    lay = get_strategy("parm").layout(12, 2, r=2)
+    assert lay.parity == 6
+
+
+def test_des_scenarios_all_run_and_report_name():
+    from repro.serving.scenarios import available_scenarios
+    cfg = SimConfig(n_queries=1000, qps=200, m=8, k=2, seed=1)
+    for name in available_scenarios():
+        r = simulate(cfg, "parm", scenario=name)
+        assert r["scenario"] == name
+        assert np.isfinite(r["p999_ms"]) and r["median_ms"] > 0
+
+
+def test_des_bursty_arrivals_inflate_tail():
+    """The MMPP hazard must actually modulate arrivals: bursts at 3x the
+    base rate overload the pool and show up in the tail."""
+    cfg = SimConfig(n_queries=5000, qps=270, m=12, k=2, seed=0)
+    calm = simulate(cfg, "parm", scenario="calm")
+    bursty = simulate(cfg, "parm", scenario="bursty")
+    assert bursty["p999_ms"] > calm["p999_ms"]
 
 
 # ------------------------------------------------------------ threaded ----

@@ -92,6 +92,7 @@ def test_served_parm_pipeline(trained_system):
         fe.shutdown()
 
 
+@pytest.mark.slow
 def test_lm_parity_training_loss_decreases():
     """The paper's technique on the LM substrate (embedding-space encoder):
     parity-distillation loss must drop during training."""
