@@ -205,7 +205,25 @@ def bench_r2_concurrent_failures():
     print(f"r2_both_missing_Ad,{hits:.3f},default={1/N_CLASSES:.2f}")
 
 
+def bench_unavailability_schemes():
+    """Accuracy under unavailability across the scheme registry on the
+    resnet18_cifar family (ROADMAP learned-codes item): sum / concat /
+    learned / approx_backup, one unavailable query per coding group.  The
+    learned code starts AT the sum code (zero-init residual) and is trained
+    jointly with its parity model, so it must report A_d >= sum's."""
+    from repro.eval.unavailability import accuracy_under_unavailability
+    res = accuracy_under_unavailability(
+        n_train=3000, n_test=400, noise=0.8, deployed_epochs=4,
+        parity_epochs=6, seed=0)
+    print(f"resnet18_unavail_available_Aa,{res['A_a']:.3f},")
+    for name, a_d in res["schemes"].items():
+        print(f"resnet18_unavail_{name}_Ad,{a_d:.3f},")
+    gain = res["schemes"]["learned"] - res["schemes"]["sum"]
+    print(f"resnet18_unavail_learned_minus_sum,{gain:+.3f},"
+          f"learned_ge_sum={res['schemes']['learned'] >= res['schemes']['sum']}")
+
+
 ALL = [bench_table1_toy, bench_fig6_degraded_accuracy,
        bench_fig7_overall_accuracy, bench_fig8_localization,
        bench_fig9_vary_k, bench_fig10_task_specific_encoder,
-       bench_r2_concurrent_failures]
+       bench_r2_concurrent_failures, bench_unavailability_schemes]

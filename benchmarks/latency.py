@@ -1,7 +1,21 @@
 """Tail-latency benchmarks — paper §5 (Figs 11-15) via the discrete-event
-simulator, plus §5.2.5 encoder/decoder microbenchmarks on real arrays."""
+simulator, plus §5.2.5 encoder/decoder microbenchmarks on real arrays.
+
+Also runnable standalone (the CI bench-regression gate uses this)::
+
+    PYTHONPATH=src python -m benchmarks.latency --smoke --json BENCH_ci.json
+    PYTHONPATH=src python -m benchmarks.latency --scheme learned
+
+``--smoke`` runs the small deterministic DES set gated by
+``benchmarks/regression_check.py`` against ``benchmarks/BENCH_baseline.json``
+(the DES is driven by seeded numpy RNGs, so smoke metrics are bit-stable
+across machines — the gate trips on code changes, not on CI noise).
+``--scheme`` narrows the scheme-sweep bench to one registered coding scheme.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -140,7 +154,92 @@ def bench_scenarios():
               f"parm={parm['p999_ms']:.1f} none={none['p999_ms']:.1f}")
 
 
+def bench_scheme_tails(schemes=None):
+    """Every registered coding scheme through the SAME coded serving path:
+    the registry sweep the plugin API exists for.  ``sum`` and ``learned``
+    share decode semantics (identical tails — the learned encoder buys
+    accuracy, not latency); ``replication`` pays r=k parity pools;
+    ``approx_backup`` is the §5.2.6 baseline as a k=1 scheme."""
+    from repro.core.scheme import available_schemes
+    for scheme in (schemes or available_schemes()):
+        cfg = SimConfig(n_queries=NQ // 2, qps=270, m=12, k=2, seed=1)
+        strat = "approx_backup" if scheme == "approx_backup" else "parm"
+        res = simulate(cfg, strat, scheme=scheme)
+        _row(f"scheme_{scheme}", res, extra=f"recon={res['reconstructions']}")
+
+
+SMOKE_NQ = 8000      # smoke-set size; recorded in the JSON the gate reads
+
+
+def bench_ci_smoke():
+    """The CI bench-regression set: a small, fully deterministic DES sweep
+    (seeded numpy RNG — bit-stable across machines).  Returns
+    ``{metric_name: value}``; ``*_ms`` metrics are gated against
+    ``benchmarks/BENCH_baseline.json`` by ``benchmarks/regression_check.py``
+    (>25% regression fails CI)."""
+    out = {}
+
+    def put(tag, res):
+        out[f"{tag}_median_ms"] = round(res["median_ms"], 3)
+        out[f"{tag}_p999_ms"] = round(res["p999_ms"], 3)
+        out[f"{tag}_reconstructions"] = res["reconstructions"]
+
+    n = SMOKE_NQ
+    for strat in ("parm", "equal_resources", "replication", "none"):
+        put(f"smoke_{strat}",
+            simulate(SimConfig(n_queries=n, qps=270, m=12, k=2, seed=1),
+                     strat))
+    from repro.core.scheme import available_schemes
+    for scheme in available_schemes():
+        strat = "approx_backup" if scheme == "approx_backup" else "parm"
+        put(f"smoke_scheme_{scheme}",
+            simulate(SimConfig(n_queries=n, qps=270, m=12, k=2, seed=1),
+                     strat, scheme=scheme))
+    for r in (1, 2):
+        put(f"smoke_r{r}_correlated",
+            simulate(SimConfig(n_queries=n, qps=270, m=12, k=2, r=r, seed=1),
+                     "parm", scenario="correlated_slowdown"))
+    for name, value in sorted(out.items()):
+        print(f"{name},{value},ci_smoke")
+    return out
+
+
 ALL = [bench_fig11_latency_vs_qps, bench_fig12_vary_k,
        bench_fig13_network_imbalance, bench_fig14_light_multitenancy,
        bench_fig15_approx_backup, bench_sec525_encode_decode_latency,
-       bench_batching, bench_r2_multi_straggler, bench_scenarios]
+       bench_batching, bench_r2_multi_straggler, bench_scenarios,
+       bench_scheme_tails]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the deterministic CI smoke set only")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write smoke metrics as JSON (with --smoke)")
+    ap.add_argument("--scheme", default=None,
+                    help="run the scheme-sweep bench for one registered "
+                         "coding scheme (e.g. learned)")
+    args = ap.parse_args()
+    if args.json and not args.smoke:
+        ap.error("--json records the smoke metric set; pass --smoke too")
+    if args.smoke and args.scheme:
+        ap.error("--smoke always sweeps every registered scheme; "
+                 "drop --scheme")
+    if args.smoke:
+        metrics = bench_ci_smoke()
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"n_queries": SMOKE_NQ, "metrics": metrics}, f,
+                          indent=2, sort_keys=True)
+            print(f"# wrote {len(metrics)} metrics to {args.json}")
+        return
+    if args.scheme:
+        bench_scheme_tails(schemes=[args.scheme])
+        return
+    for fn in ALL:
+        fn()
+
+
+if __name__ == "__main__":
+    main()

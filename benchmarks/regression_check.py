@@ -1,0 +1,84 @@
+"""CI bench-regression gate.
+
+Compares a fresh ``BENCH_ci.json`` (emitted by
+``python -m benchmarks.latency --smoke --json BENCH_ci.json``) against the
+checked-in ``benchmarks/BENCH_baseline.json`` and exits non-zero when any
+gated metric regressed by more than ``--threshold`` (default 25%).
+
+Gating rules:
+
+* only ``*_ms`` metrics are gated (latencies: higher is worse) — counters
+  like ``*_reconstructions`` are informational;
+* a gated metric present in the baseline but missing from the current run
+  fails (a silently dropped bench is a regression of the gate itself);
+* metrics new in the current run are reported but do not fail — they start
+  gating once the baseline is refreshed.
+
+The smoke set is a seeded discrete-event simulation (numpy RNG), so values
+are bit-stable across machines: the gate trips on code changes that shift
+simulated latency semantics, not on CI-runner noise.  Refresh the baseline
+deliberately after an intended change::
+
+    PYTHONPATH=src python -m benchmarks.latency --smoke \
+        --json benchmarks/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(current: dict, baseline: dict, threshold: float):
+    """Returns (rows, failures); each row is a printable CSV line."""
+    rows, failures = [], []
+    for name in sorted(baseline):
+        base = baseline[name]
+        if not name.endswith("_ms"):
+            continue
+        if name not in current:
+            failures.append(f"{name}: missing from current run")
+            rows.append(f"{name},{base},MISSING,,FAIL")
+            continue
+        cur = current[name]
+        ratio = cur / base if base > 0 else 1.0
+        ok = ratio <= 1.0 + threshold
+        rows.append(f"{name},{base},{cur},{ratio:.3f},"
+                    f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{name}: {base} -> {cur} (+{(ratio - 1):.1%}, "
+                f"threshold {threshold:.0%})")
+    for name in sorted(set(current) - set(baseline)):
+        rows.append(f"{name},NEW,{current[name]},,info")
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_ci.json")
+    ap.add_argument("baseline", help="checked-in BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed relative regression (default 0.25)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)["metrics"]
+    with open(args.baseline) as f:
+        baseline = json.load(f)["metrics"]
+    rows, failures = compare(current, baseline, args.threshold)
+    print("metric,baseline,current,ratio,status")
+    for row in rows:
+        print(row)
+    if failures:
+        print(f"\n# BENCH REGRESSION ({len(failures)} metric(s) beyond "
+              f"{args.threshold:.0%}):", file=sys.stderr)
+        for f_ in failures:
+            print(f"#   {f_}", file=sys.stderr)
+        sys.exit(1)
+    n = sum(1 for r in rows if r.endswith(",ok"))
+    print(f"# bench gate ok: {n} gated metrics within "
+          f"{args.threshold:.0%} of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,17 @@
 """Tail-latency study (paper Fig 11) via the discrete-event simulator.
 
     PYTHONPATH=src python examples/latency_study.py [--qps 270] [--m 12] \
-        [--r 2] [--scheme replication] [--scenario crash]
+        [--r 2] [--scheme learned] [--scenario crash]
 
 ``--scenario`` picks a registered fault scenario (``crash``, ``bursty``,
 ``storm``, ...); omitted, the paper's background network-shuffle load runs.
-``--scheme`` / ``--r`` select the code served by the coded strategy (§3.5).
+``--scheme`` / ``--r`` select the code served by the coded strategies — any
+registered name, including ``learned`` and ``approx_backup`` (§3.5,
+DESIGN.md §7).
 """
 import argparse
 
+from repro.core.scheme import available_schemes
 from repro.serving.scenarios import available_scenarios
 from repro.serving.simulator import SimConfig, simulate
 
@@ -21,9 +24,9 @@ def main():
     ap.add_argument("--r", type=int, default=1,
                     help="parity models per coding group (paper §3.5)")
     ap.add_argument("--n", type=int, default=100_000)
-    ap.add_argument("--scheme", default=None,
-                    help="coding scheme for coded strategies "
-                         "(sum | concat | replication; default: strategy's)")
+    ap.add_argument("--scheme", default=None, choices=available_schemes(),
+                    help="coding scheme for coded strategies (e.g. sum | "
+                         "learned | replication; default: strategy's own)")
     ap.add_argument("--scenario", default=None,
                     choices=available_scenarios(),
                     help="fault scenario (default: legacy shuffle load)")

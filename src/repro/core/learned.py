@@ -1,0 +1,145 @@
+"""Learned coding scheme: a trainable encoder through the scheme registry.
+
+ParM deliberately pairs simple linear encoders with a learned parity model
+(paper §3); the learned-coded-computation line (Kosaian et al.) and
+ApproxIFER (PAPERS.md) show that learning the *code* as well buys accuracy at
+the same overhead.  ``LearnedScheme`` realises that extension point
+(DESIGN.md §5/§7) without touching either serving layer:
+
+* **encode** — the Vandermonde base code plus a small MLP residual applied
+  across the coding dimension, pointwise per feature position::
+
+      E_j(X)  =  sum_i C[j,i] X_i  +  alpha * (W2^T relu(W1^T X + b1))_j
+
+  The residual path is zero-initialised (``alpha = 0``), so a fresh scheme
+  encodes *exactly* the ``sum`` code — joint training can only move away
+  from the classical code when doing so lowers the parity objective.  The
+  MLP mixes only along k (shared across positions), so encode preserves the
+  ``[k, ...] -> [r, ...]`` shape contract for any query shape.
+
+* **decode** — inherited from ``LinearScheme`` unchanged: the *output*-space
+  code is still the ``coeffs`` combination the parity model is distilled
+  toward, so ``recoverable_rows`` / ``decode_cost`` keep their MDS
+  semantics and the DES needs no new rules.
+
+* **training** — ``train_parity_models(..., scheme="learned")`` detects
+  ``trainable = True`` and optimises encoder and parity models *jointly*
+  (``repro.core.parity._train_joint``); the returned scheme carries the
+  trained, frozen encoder params for serving.
+
+* **inference** — ``encode`` runs the frozen encoder; with
+  ``backend="pallas"`` the linear base code and the final ``[H] -> [r]``
+  projection run through the Pallas kernels
+  (``repro.kernels.learned_encoder``), the jnp path is used for training
+  (the kernels define no VJP).
+
+Encoder params are a plain pytree (``{"w1", "b1", "w2", "alpha"}``) —
+``repro.checkpoint.io.save/load`` serialises them as-is, and
+``scheme.with_params(loaded)`` rebuilds the serving scheme (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheme import LinearScheme, _pallas_encode, register_scheme
+
+
+def init_encoder_params(k, r, hidden, seed=0, alpha=0.0):
+    """He-init MLP over the coding dimension; ``alpha`` gates the residual
+    path (0 = start exactly at the linear base code)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {
+        "w1": (jax.random.normal(k1, (k, hidden))
+               * np.sqrt(2.0 / k)).astype(jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": (jax.random.normal(k2, (hidden, r))
+               * np.sqrt(1.0 / hidden)).astype(jnp.float32),
+        "alpha": jnp.asarray(alpha, jnp.float32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _encode_flat(enc, coeffs, q, use_pallas=False):
+    """q [k, B, F] -> [r, B, F]: linear base code + alpha * MLP residual."""
+    r = coeffs.shape[0]
+    h = jax.nn.relu(jnp.einsum("kh,kbf->hbf", enc["w1"], q)
+                    + enc["b1"][:, None, None])
+    if use_pallas:
+        from repro.kernels import ops
+        lin = _pallas_encode(q, coeffs, r)
+        proj = ops.learned_project_op(h, enc["w2"])
+    else:
+        lin = jnp.einsum("rk,kbf->rbf", coeffs.astype(q.dtype), q)
+        proj = jnp.einsum("hr,hbf->rbf", enc["w2"], h)
+    return lin + enc["alpha"] * proj
+
+
+def learned_encode(enc_params, coeffs, queries, use_pallas=False):
+    """Shape-generic encode: ``[k, ...] -> [r, ...]`` for any trailing query
+    shape (vectors, batched features, images).  Differentiable w.r.t.
+    ``enc_params`` on the jnp path — the joint training objective calls this
+    directly; the Pallas path is inference-only."""
+    q = jnp.asarray(queries).astype(jnp.float32)
+    k = q.shape[0]
+    r = coeffs.shape[0]
+    flat = q.reshape(k, q.shape[1], -1) if q.ndim >= 3 else \
+        q.reshape(k, 1, -1)
+    out = _encode_flat(enc_params, coeffs, flat, use_pallas=use_pallas)
+    return out.reshape((r,) + q.shape[1:])
+
+
+@dataclass(frozen=True)
+class LearnedScheme(LinearScheme):
+    """Trainable encoder over the Vandermonde base code; see module
+    docstring.  ``enc_params=None`` initialises a fresh (identity-to-sum)
+    encoder from ``enc_seed`` — deterministic, so registry-name resolution
+    in the DES and the differential battery serve a well-defined code."""
+
+    hidden: int = 16
+    enc_seed: int = 0
+    enc_params: Optional[dict] = None
+    name: str = "learned"
+
+    # train_parity_models switches to the joint encoder+parity objective
+    trainable = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.enc_params is None:
+            object.__setattr__(
+                self, "enc_params",
+                init_encoder_params(self.k, self.r, self.hidden,
+                                    self.enc_seed))
+
+    def encode(self, queries):
+        """Frozen-encoder inference path ([k, ...] -> [r, ...])."""
+        queries = jnp.asarray(queries)
+        assert queries.shape[0] == self.k, queries.shape
+        return learned_encode(self.enc_params, self.coeffs, queries,
+                              use_pallas=(self.backend == "pallas"))
+
+    __call__ = encode
+
+    def encode_with_params(self, enc_params, queries):
+        """Differentiable encode for the joint training objective (always
+        jnp — the Pallas kernels define no VJP)."""
+        return learned_encode(enc_params, self.coeffs, queries,
+                              use_pallas=False)
+
+    def with_params(self, enc_params):
+        """A copy of this scheme serving ``enc_params`` (the training hook's
+        return path, and the deserialization path for checkpointed
+        encoders)."""
+        return replace(self, enc_params=enc_params)
+
+
+register_scheme(
+    "learned",
+    lambda k, r=1, backend="jnp", **kw: LearnedScheme(
+        k=k, r=r, backend=backend, **kw))

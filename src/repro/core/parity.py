@@ -95,14 +95,74 @@ class ParityTrainer:
         return params, losses
 
 
+def _train_joint(scheme, parity_fwd, init_fn, x, fx, epochs, seed, batch,
+                 opt=None, log_every=0):
+    """Joint encoder + parity objective for trainable schemes (DESIGN.md §7):
+    minimise  mean_j MSE( F_P_j( E_theta(X)_j ),  sum_i C[j,i] F(X_i) )
+    over (theta, parity params) together.  The decode targets stay the
+    linear ``coeffs`` combination — the *output* code is untouched, so the
+    scheme's decode / recoverability semantics hold for the trained encoder.
+
+    Returns ``(parity_params list, scheme.with_params(trained_theta))``."""
+    k, r = scheme.k, scheme.r
+    rng = np.random.default_rng(seed)
+    groups, order = group_queries(np.asarray(x), k, rng)        # [G, k, ...]
+    fxg = fx[order].reshape(groups.shape[0], k, *fx.shape[1:])
+    C = np.asarray(scheme.coeffs, np.float32)
+    targets = np.einsum("rk,gk...->rg...", C, fxg)              # [r, G, V]
+    qk = np.ascontiguousarray(np.moveaxis(groups, 1, 0))        # [k, G, ...]
+    params = {"enc": scheme.enc_params,
+              "parity": [init_fn(jax.random.PRNGKey(seed + 17 * j))
+                         for j in range(r)]}
+    opt = opt or AdamConfig(lr=1e-3, weight_decay=1e-5)
+    state = adam_init(params, opt)
+
+    @jax.jit
+    def step(params, state, qb, tb):
+        def loss_fn(p):
+            enc_q = scheme.encode_with_params(p["enc"], qb)     # [r, b, ...]
+            return sum(parity_mse(parity_fwd(p["parity"][j], enc_q[j]),
+                                  tb[j]) for j in range(r)) / r
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(grads, state, params, opt)
+        return params, state, loss
+
+    n_groups = groups.shape[0]
+    b = min(batch, n_groups)
+    losses = []
+    for ep in range(epochs):
+        order = rng.permutation(n_groups)
+        for i in range(0, n_groups - b + 1, b):
+            sel = order[i:i + b]
+            params, state, loss = step(params, state,
+                                       jnp.asarray(qk[:, sel]),
+                                       jnp.asarray(targets[:, sel]))
+            losses.append(float(loss))
+        if log_every:
+            print(f"  joint encoder+parity epoch {ep}: "
+                  f"loss={losses[-1]:.5f}")
+    return params["parity"], scheme.with_params(params["enc"]), losses
+
+
 def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=None,
                         scheme="sum", epochs=5, seed=0, batch=64,
                         use_true_labels=False, labels=None, n_classes=None,
-                        encoder_kind=None):
+                        encoder_kind=None, parity_fwd=None):
     """End-to-end §3.3 pipeline: trains one parity model per parity row of
     ``scheme`` (a ``CodingScheme`` instance or registered name; ``r`` defaults
     to 1 for names and to the scheme's own r for instances — an explicit
-    mismatch raises).
+    mismatch raises).  Grouping follows ``scheme.k`` — a ``fixes_k`` scheme
+    (approx_backup: k=1) owns its group size, which turns this pipeline into
+    plain backup-model distillation for it.
+
+    A scheme with ``trainable = True`` (the ``learned`` scheme) switches to
+    the joint encoder+parity objective: encoder params and all r parity
+    models are optimised together and the *returned scheme* carries the
+    trained, frozen encoder.
+
+    ``parity_fwd`` lets the parity model be a different architecture from
+    the deployed model (the approx_backup scheme's cheap backup); defaults
+    to ``fwd``.
 
     Returns ``(list of scheme.r parity params, scheme)`` — the scheme object
     carries ``encode`` / ``decode`` / ``decode_one`` / ``coeffs`` for serving.
@@ -115,17 +175,23 @@ def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=None,
             DeprecationWarning, stacklevel=2)
         scheme = encoder_kind
     scheme = get_scheme(scheme, k=k, r=r)
+    pfwd = parity_fwd or fwd
     fx = np.asarray(jax.jit(fwd)(deployed_params, jnp.asarray(x_train)))
     if use_true_labels:
         fx = np.eye(n_classes, dtype=np.float32)[labels] * 10.0  # scaled one-hot
+    if getattr(scheme, "trainable", False):
+        parity_params, scheme, _ = _train_joint(
+            scheme, pfwd, init_fn, x_train, fx, epochs=epochs, seed=seed,
+            batch=batch)
+        return parity_params, scheme
     rng = np.random.default_rng(seed)
     parity_params = []
     for j in range(scheme.r):
-        pq, tg = make_parity_dataset(np.asarray(x_train), fx, k, scheme,
-                                     j, rng)
+        pq, tg = make_parity_dataset(np.asarray(x_train), fx, scheme.k,
+                                     scheme, j, rng)
         key = jax.random.PRNGKey(seed + 17 * j)
         pp = init_fn(key)
-        trainer = ParityTrainer(fwd=fwd)
+        trainer = ParityTrainer(fwd=pfwd)
         pp, _ = trainer.train(pp, pq, tg, batch=batch, epochs=epochs,
                               seed=seed + j)
         parity_params.append(pp)

@@ -25,6 +25,17 @@ Built-in entries:
                      passthrough.  Registering it here is what lets
                      replication run through the coded serving path instead of
                      being a simulator-only special case.
+* ``approx_backup``— §5.2.6 approximate backups expressed as a degraded-
+                     quality scheme: k = 1 groups, one cheap backup model per
+                     group, decode is a passthrough of the (approximate)
+                     backup output.  Registering it here is what lets the
+                     ``approx_backup`` strategy ride the coded serving path
+                     instead of being a special ``backup`` pool in both
+                     serving layers.
+* ``learned``      — ``repro.core.learned.LearnedScheme``: a trainable
+                     encoder (Vandermonde base code + a small MLP residual
+                     over the coding dimension) trained jointly with the
+                     parity models; decode is still the linear output code.
 
 ``backend="jnp" | "pallas"`` selects the implementation of the hot paths:
 ``pallas`` routes encode / r=1-decode through the Pallas TPU kernels in
@@ -100,6 +111,17 @@ def decode_cost(scheme, n_missing):
     if fn is not None:
         return float(fn(n_missing))
     return 1.0 if n_missing <= 1 else float(n_missing)
+
+
+def encode_cost(scheme):
+    """Relative encode cost per coding group, in units of one linear-
+    combination encode (the calibration point of ``SimConfig.encode_ms``).
+    Schemes may provide their own ``encode_cost()``; identity "encodes"
+    (replication, approximate backups) charge 0 — no frontend math runs."""
+    fn = getattr(scheme, "encode_cost", None)
+    if fn is not None:
+        return float(fn())
+    return 1.0
 
 
 def _pallas_encode(queries, coeffs, r):
@@ -299,19 +321,63 @@ class ReplicationScheme:
         del n_missing
         return 0.0
 
+    def encode_cost(self):
+        """"Encoding" mirrors the queries — no frontend math runs."""
+        return 0.0
+
+
+@dataclass(frozen=True)
+class ApproxBackupScheme(ReplicationScheme):
+    """§5.2.6 approximate backups expressed as a degraded-quality coding
+    scheme: every query is its own coding group (k = 1), the single "parity
+    query" is the query itself, and the parity model is a *cheaper* backup
+    model — decode passes its (approximate) output through.
+
+    ``fixes_k = True`` decouples the scheme's group size from the serving
+    layers' redundancy-budget k: ``strategy.layout(m, k, r)`` still spends
+    the paper's m/k budget on backup instances, while group assembly follows
+    ``scheme.k = 1``.  ``approximate = True`` tells the DES to run the parity
+    pool at ``cfg.approx_speedup`` times the deployed service rate; in the
+    threaded runtime the backup model's params (``parity_params``, with
+    ``parity_fwd`` for a different architecture) are what make it cheap.
+
+    Expressing the baseline as a scheme is what removes the dedicated
+    ``backup`` pool special case from BOTH serving layers."""
+
+    k: int = 1
+    name: str = "approx_backup"
+    fixes_k = True              # group size is the scheme's own, not budget k
+    approximate = True          # DES: parity pool runs at cfg.approx_speedup
+
+    def __post_init__(self):
+        if self.k != 1:
+            raise ValueError(
+                f"approx_backup scheme has k == 1 (one cheap backup query "
+                f"per group), got k={self.k}")
+        super().__post_init__()
+
 
 # --------------------------------------------------------------- registry ---
 _SCHEMES: Dict[str, Callable[..., CodingScheme]] = {}
 
 
-def register_scheme(name: str, factory: Callable[..., CodingScheme] = None):
+def register_scheme(name: str, factory: Callable[..., CodingScheme] = None,
+                    *, override: bool = False):
     """Register a scheme factory ``factory(k, r, backend, **kw)`` under
     ``name``.  Usable as a decorator::
 
         @register_scheme("mycode")
         class MyScheme: ...
-    """
+
+    Registering a *different* factory under an existing name raises unless
+    ``override=True`` — a silent replacement would reroute every call site
+    that resolves the name (re-registering the same factory is a no-op, so
+    module re-imports stay safe)."""
     def _register(f):
+        if not override and _SCHEMES.get(name, f) is not f:
+            raise ValueError(
+                f"coding scheme {name!r} is already registered; pass "
+                f"override=True to replace it")
         _SCHEMES[name] = f
         return f
     if factory is None:
@@ -329,7 +395,9 @@ def get_scheme(scheme, k=None, r=None, *, backend=None, **kw) -> CodingScheme:
     * a CodingScheme instance passes through, after validating it against
       any k / r / backend the caller explicitly asked for (``None`` means
       "whatever the instance has" — a silent mismatch would train or serve
-      the wrong code);
+      the wrong code).  Schemes with ``fixes_k = True`` (approx_backup) own
+      their group size, so the caller's k — the redundancy-*budget* k — is
+      not checked against them;
     * a string is looked up in the registry and instantiated with
       ``(k=k, r=r, backend=backend, **kw)`` (r defaults to 1, backend to
       "jnp").
@@ -338,7 +406,8 @@ def get_scheme(scheme, k=None, r=None, *, backend=None, **kw) -> CodingScheme:
         if not isinstance(scheme, CodingScheme):
             raise TypeError(
                 f"not a CodingScheme or registered name: {scheme!r}")
-        if k is not None and scheme.k != k:
+        if k is not None and scheme.k != k and \
+                not getattr(scheme, "fixes_k", False):
             raise ValueError(
                 f"scheme {scheme.name!r} has k={scheme.k}, but k={k} was "
                 f"requested")
@@ -371,3 +440,16 @@ register_scheme(
     # call sites (registry round-trip loops, frontends) need no special case
     lambda k, r=None, backend="jnp", **kw: ReplicationScheme(
         k=k, backend=backend, **kw))
+register_scheme(
+    "approx_backup",
+    # the scheme fixes k = 1 and r = 1; the caller's k is the redundancy
+    # budget, which sizes the backup pool, not the group
+    lambda k=None, r=None, backend="jnp", **kw: ApproxBackupScheme(
+        backend=backend, **kw))
+
+# the learned scheme lives in its own module (encoder init + joint-training
+# helpers); importing it registers "learned".  Import at the bottom: it
+# subclasses LinearScheme and calls register_scheme from this module.
+from repro.core import learned as _learned  # noqa: E402  (registration)
+
+del _learned

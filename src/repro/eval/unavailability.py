@@ -1,0 +1,117 @@
+"""Accuracy under unavailability, across coding schemes (paper §4's A_a /
+A_d methodology applied to the scheme registry).
+
+One shared pipeline — train a deployed model on the resnet18_cifar task
+family, then for each scheme train its parity/backup models through
+``train_parity_models`` and measure
+
+* ``A_a`` — available accuracy (deployed model, no unavailability), and
+* ``A_d`` — degraded accuracy: with ONE unavailable query per coding group,
+  the accuracy of the scheme's *reconstructed* predictions only.
+
+Every scheme flows through the same registry entry points the serving
+layers use, so this is also an end-to-end exercise of the plugin API:
+
+* ``sum`` / ``concat``  — the paper's codes, parity model distilled per §3.3;
+* ``learned``           — joint encoder+parity training
+                          (``repro.core.parity._train_joint``);
+* ``approx_backup``     — k=1 groups; "parity training" degenerates to
+                          distilling a *cheaper* backup architecture
+                          (``backup_model``), and A_d is the backup's
+                          accuracy — the §5.2.6 baseline as a scheme.
+
+Used by ``benchmarks/accuracy.py`` (``bench_unavailability_schemes``) and
+locked by ``tests/test_learned_scheme.py`` (learned >= sum on
+resnet18_cifar, the ROADMAP acceptance bar for learned codes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet18_cifar import IMAGE_SHAPE
+from repro.core.metrics import degraded_accuracy, topk_accuracy
+from repro.core.parity import train_parity_models
+from repro.data.pipeline import batched, cluster_images
+from repro.models.cnn import build
+from repro.training.loss import softmax_xent
+from repro.training.optim import AdamConfig, adam_init, adam_update
+
+DEFAULT_SCHEMES = ("sum", "concat", "learned", "approx_backup")
+
+
+def _train_deployed(x, y, model, image_shape, n_classes, epochs, seed):
+    params, fwd = build(model, jax.random.PRNGKey(seed),
+                        image_shape=image_shape, n_out=n_classes)
+    opt = AdamConfig(lr=1e-3)
+    st = adam_init(params, opt)
+
+    @jax.jit
+    def step(p, s, xb, yb):
+        l, g = jax.value_and_grad(lambda p: softmax_xent(fwd(p, xb), yb))(p)
+        p, s = adam_update(g, s, p, opt)
+        return p, s, l
+
+    for xb, yb in batched(x, y, 64, seed=seed, epochs=epochs):
+        params, st, _ = step(params, st, xb, yb)
+    return params, fwd
+
+
+def _degraded(scheme, parity_params, parity_fwd, deployed_params, fwd,
+              xt, yt, n_classes):
+    """A_d with one unavailable member per group, every position simulated
+    (the paper's evaluation loop), via the scheme's own encode/decode."""
+    gk = scheme.k
+    n = (len(xt) // gk) * gk
+    groups = xt[:n].reshape(-1, gk, *xt.shape[1:])              # [G, gk, ...]
+    glabels = yt[:n].reshape(-1, gk)
+    member = np.asarray(fwd(deployed_params, jnp.asarray(
+        groups.reshape(n, *xt.shape[1:])))).reshape(-1, gk, n_classes)
+    pq = np.asarray(scheme.encode(
+        jnp.asarray(np.moveaxis(groups, 1, 0))))                # [r, G, ...]
+    parity_outs = np.stack(
+        [np.asarray(parity_fwd(parity_params[j], jnp.asarray(pq[j])))
+         for j in range(scheme.r)], axis=1)                     # [G, r, V]
+    return degraded_accuracy(parity_outs, member, glabels, scheme)
+
+
+def accuracy_under_unavailability(schemes=DEFAULT_SCHEMES, *, model="resnet",
+                                  backup_model="mlp",
+                                  image_shape=IMAGE_SHAPE, n_classes=10,
+                                  k=2, n_train=1500, n_test=600, noise=2.0,
+                                  deployed_epochs=3, parity_epochs=5,
+                                  seed=0):
+    """Returns ``{"A_a": float, "schemes": {name: A_d}}`` on the
+    resnet18_cifar task family (CIFAR-shaped Gaussian-cluster images — no
+    datasets ship with the container)."""
+    x, y, tmpl = cluster_images(n_train, noise=noise, seed=seed,
+                                image_shape=image_shape, n_classes=n_classes)
+    xt, yt, _ = cluster_images(n_test, noise=noise, seed=seed + 1,
+                               templates=tmpl, image_shape=image_shape,
+                               n_classes=n_classes)
+    params, fwd = _train_deployed(x, y, model, image_shape, n_classes,
+                                  deployed_epochs, seed)
+    a_a = topk_accuracy(np.asarray(fwd(params, jnp.asarray(xt))), yt)
+
+    results = {}
+    for name in schemes:
+        if name == "approx_backup":
+            # the backup is a cheaper architecture; the k=1 "parity
+            # training" is plain distillation of the deployed model into it
+            init_fn = lambda kk: build(backup_model, kk,
+                                       image_shape=image_shape,
+                                       n_out=n_classes)[0]
+            pfwd = build(backup_model, jax.random.PRNGKey(0),
+                         image_shape=image_shape, n_out=n_classes)[1]
+        else:
+            # parity models share the deployed architecture (§3.3)
+            init_fn = lambda kk: build(model, kk, image_shape=image_shape,
+                                       n_out=n_classes)[0]
+            pfwd = fwd
+        pp, scheme = train_parity_models(
+            params, fwd, init_fn, x, k=k, scheme=name,
+            epochs=parity_epochs, seed=seed, parity_fwd=pfwd)
+        results[name] = _degraded(scheme, pp, pfwd, params, fwd, xt, yt,
+                                  n_classes)
+    return {"A_a": a_a, "schemes": results}

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels.parity_encode import parity_encode as _encode
 from repro.kernels.parity_decode import parity_decode as _decode
+from repro.kernels.learned_encoder import learned_project as _project
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 
@@ -37,6 +38,15 @@ def parity_decode_op(parity_out, outputs, missing_idx, coeffs=None, **kw):
     inv_c = 1.0 / c[missing_idx]
     return _decode(parity_out, outputs, avail, inv_c,
                    interpret=_interpret(), **kw)
+
+
+def learned_project_op(h, w, **kw):
+    """Learned-encoder final projection: h [H, B, ...] (any trailing feature
+    shape); w [H, r] -> [r, B, ...]."""
+    hd, B = h.shape[:2]
+    flat = h.reshape(hd, B, -1)
+    out = _project(flat, w, interpret=_interpret(), **kw)
+    return out.reshape((w.shape[1], B) + h.shape[2:])
 
 
 def flash_attention_op(q, k, v, *, causal=True, window=0, **kw):

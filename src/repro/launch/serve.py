@@ -119,8 +119,7 @@ def main():
         lat = np.array([q.latency_ms for q in qs])
         lay = fe.strategy.layout(args.m, k, fe.r)
         pools = f"main={lay.main}" + \
-            (f" parity={lay.parity}x{fe.r}" if lay.parity else "") + \
-            (f" backup={lay.backup}" if lay.backup else "")
+            (f" parity={lay.parity}x{fe.r}" if lay.parity else "")
         print(f"\nserved {args.n} queries via '{args.strategy}' "
               f"({pools}; instance 0 straggles {args.straggle_ms:.0f} ms)")
         print(f"latency p50={np.percentile(lat, 50):.1f}ms "

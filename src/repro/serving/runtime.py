@@ -91,24 +91,35 @@ class ParMFrontend:
     (``parm`` | ``equal_resources`` | ``replication`` | ``approx_backup`` |
     ``default_slo`` | ``none``); owns pool layout and unavailability behavior.
     ``scheme`` — a ``CodingScheme`` or registered name (``sum`` | ``concat`` |
-    ``replication``); owns encode/decode. ``backend`` selects the jnp or
-    Pallas-kernel hot path when ``scheme`` is given by name.
+    ``replication`` | ``approx_backup`` | ``learned``); owns encode/decode
+    AND the coding-group size: groups are assembled with ``scheme.k``
+    queries, which a ``fixes_k`` scheme (approx_backup: k = 1, one cheap
+    backup query per group) decouples from the redundancy-budget ``k`` that
+    sizes the pools. ``backend`` selects the jnp or Pallas-kernel hot path
+    when ``scheme`` is given by name.
 
-    The old ``mode=`` kwarg is a deprecated alias for ``strategy=``.
+    The old ``mode=`` kwarg is a deprecated alias for ``strategy=``; the old
+    ``backup_params=`` (the removed dedicated backup pool) is a deprecated
+    alias for ``parity_params=``.
     """
 
     def __init__(self, fwd, deployed_params, parity_params=None, *, k=2,
                  r=None, m=4, strategy="parm", scheme=None, backend=None,
                  mode=None, delay_fn=None, encode_fn=None, decode_fn=None,
                  default_prediction=None, slo_ms=None, backup_params=None,
-                 scenario=None, scenario_seed=0, scenario_time_scale=1.0,
-                 scenario_horizon_ms=600_000.0):
+                 parity_fwd=None, scenario=None, scenario_seed=0,
+                 scenario_time_scale=1.0, scenario_horizon_ms=600_000.0):
         """``r > 1`` (paper §3.5): ``parity_params`` is a list of r parity
         models, each trained to the j-th Vandermonde combination; r parity
         queries are dispatched per coding group and the decoder solves the
         linear system for up to r concurrent unavailabilities. ``r`` and
         ``backend`` default to the scheme's own values when a scheme
         *instance* is passed; an explicit mismatch raises.
+
+        ``parity_fwd`` — forward function for the parity-pool workers when
+        the parity model is a *different architecture* from the deployed
+        model (the approx_backup scheme's cheap backup model); defaults to
+        ``fwd``.
 
         ``scenario`` — a fault ``Scenario`` (instance or registered name from
         ``repro.serving.scenarios``, e.g. ``"crash"``); its hazards are
@@ -124,12 +135,23 @@ class ParMFrontend:
                 "ParMFrontend(mode=...) is deprecated; use strategy=",
                 DeprecationWarning, stacklevel=2)
             strategy = mode
+        if backup_params is not None:
+            warnings.warn(
+                "ParMFrontend(backup_params=...) is deprecated; approximate "
+                "backups are the coded 'approx_backup' scheme now — pass "
+                "parity_params= (and parity_fwd= for a cheaper architecture)",
+                DeprecationWarning, stacklevel=2)
+            if parity_params is None:
+                parity_params = backup_params
         self.strategy = get_strategy(strategy)
         if scheme is None:
             scheme = self.strategy.scheme or "sum"
         # validates k / r / backend against scheme instances
         self.scheme = get_scheme(scheme, k=k, r=r, backend=backend)
         self.k = k
+        # group assembly follows the scheme's own group size: a fixes_k
+        # scheme (approx_backup) decouples it from the budget k
+        self.group_k = self.scheme.k if self.strategy.coded else k
         # a scheme may fix its own parity count (replication: r = k)
         self.r = self.scheme.r if self.strategy.coded else \
             (1 if r is None else r)
@@ -158,8 +180,6 @@ class ParMFrontend:
             if self.strategy.coded and layout.parity:
                 for j in range(self.r):
                     pool_sizes[f"parity{j}"] = layout.parity
-            if layout.backup:
-                pool_sizes["backup"] = layout.backup
             delay_fn = self.scenario.delay_fn(
                 pool_sizes, seed=scenario_seed,
                 horizon_ms=scenario_horizon_ms,
@@ -185,22 +205,12 @@ class ParMFrontend:
                 pq = queue.Queue()
                 self.parity_qs.append(pq)
                 for i in range(layout.parity):
-                    w = ModelInstance(instance_id(f"parity{j}", i), pq, fwd,
-                                      parity_params[j],
+                    w = ModelInstance(instance_id(f"parity{j}", i), pq,
+                                      parity_fwd or fwd, parity_params[j],
                                       self._on_parity_done, delay_fn)
                     w.start()
                     self.workers.append(w)
             self.parity_q = self.parity_qs[0]      # back-compat alias
-        if layout.backup:
-            if backup_params is None:
-                backup_params = deployed_params
-            self.backup_q = queue.Queue()
-            for i in range(layout.backup):
-                w = ModelInstance(instance_id("backup", i), self.backup_q,
-                                  fwd, backup_params,
-                                  self._on_backup_done, delay_fn)
-                w.start()
-                self.workers.append(w)
 
     # ------------------------------------------------------------------
     def submit(self, qid, x):
@@ -212,7 +222,7 @@ class ParMFrontend:
             if self.strategy.coded:
                 self._pending_group.append(qid)
                 self.gid_of[qid] = self._next_gid
-                if len(self._pending_group) == self.k:
+                if len(self._pending_group) == self.group_k:
                     gid = self._next_gid
                     members = list(self._pending_group)
                     self._pending_group.clear()
@@ -236,8 +246,6 @@ class ParMFrontend:
             parities = self.encode_fn(stacked)
             for j, pq in enumerate(self.parity_qs):
                 pq.put(("parity", (gid, j), parities[j]))
-        if self.strategy.backup:
-            self.backup_q.put(("query", qid, x))
         if self.strategy.slo_default and self.slo_ms is not None:
             t = threading.Timer(self.slo_ms / 1e3, self._default_fire,
                                 args=(qid,))
@@ -279,9 +287,6 @@ class ParMFrontend:
                 return
             info["parity"][j] = out
             self._maybe_decode(gid, info)
-
-    def _on_backup_done(self, tag, qid, out):
-        self.queries[qid].fulfill(out, "backup")
 
     def _recoverable(self, miss_mask, parity_avail):
         """Which missing rows can be reconstructed now? Delegates to the

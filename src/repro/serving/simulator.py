@@ -17,12 +17,18 @@ other file runs here untouched.
 
 Codes are ``CodingScheme`` objects resolved through ``get_scheme`` — again
 the same objects ``ParMFrontend`` serves.  For a coded strategy the DES runs
-one parity pool per parity model (r pools, paper §3.5), and reconstruction
-follows the scheme's own recoverability rule via the shared
-``recoverable_rows`` (MDS all-or-nothing for linear codes: up to r concurrent
-unavailabilities per group; per-row replica arrival for replication), with
-decode latency scaled by the scheme's ``decode_cost`` hint for the r>1
-least-squares path.
+one parity pool per parity model (r pools, paper §3.5), assembles coding
+groups of ``scheme.k`` queries (a ``fixes_k`` scheme — approx_backup — owns
+its group size; ``cfg.k`` stays the redundancy budget that sizes the pools),
+and reconstruction follows the scheme's own recoverability rule via the
+shared ``recoverable_rows`` (MDS all-or-nothing for linear codes: up to r
+concurrent unavailabilities per group; per-row replica arrival for
+replication and approximate backups), with encode/decode latency scaled by
+the scheme's ``encode_cost`` / ``decode_cost`` hints.  A scheme marked
+``approximate`` (the approx_backup scheme) runs its parity pool at
+``cfg.approx_speedup`` times the deployed service rate — the §5.2.6
+cheap-backup economics, now scheme-owned instead of a dedicated backup-pool
+special case.
 
 Fault injection beyond the built-in shuffle load comes from ``Scenario``
 objects (``repro.serving.scenarios``): ``simulate(cfg, strategy,
@@ -39,7 +45,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.scheme import decode_cost, get_scheme, recoverable_rows
+from repro.core.scheme import (decode_cost, encode_cost, get_scheme,
+                               recoverable_rows)
 from repro.serving.scenarios import get_scenario
 from repro.serving.strategy import get_strategy
 
@@ -133,9 +140,12 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
     bookkeeping."""
     strat = get_strategy(strategy)
     rng = np.random.default_rng(cfg.seed)
-    k = cfg.k
+    k = cfg.k                               # redundancy budget (pool sizing)
+    gk = k                                  # coding-group size
     schm = None
     r = cfg.r
+    enc_ms = cfg.encode_ms
+    parity_service_ms = cfg.service_ms
     if strat.coded:
         want = scheme if scheme is not None else (strat.scheme or "sum")
         # cfg.r sizes registry-name schemes; an instance carries its own r
@@ -143,15 +153,17 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
         schm = get_scheme(want, k=k,
                           r=cfg.r if isinstance(want, str) else None)
         r = schm.r                          # a scheme may fix its own r
+        gk = schm.k                         # ... and its own group size
+        enc_ms = cfg.encode_ms * encode_cost(schm)
+        if getattr(schm, "approximate", False):
+            # approx_backup scheme: the parity pool runs cheap backup models
+            parity_service_ms = cfg.service_ms / cfg.approx_speedup
     layout = strat.layout(cfg.m, k, r)
     pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms)}
     if layout.parity:
         for j in range(r):
             pools[f"parity{j}"] = _Pool(f"parity{j}", layout.parity, rng,
-                                        cfg, cfg.service_ms)
-    if layout.backup:
-        pools["backup"] = _Pool("backup", layout.backup, rng, cfg,
-                                cfg.service_ms / cfg.approx_speedup)
+                                        cfg, parity_service_ms)
 
     # pre-draw arrivals (a scenario may replace Poisson with MMPP bursts)
     scen = None
@@ -170,8 +182,8 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
     # coding-group bookkeeping (coded strategies only); member availability
     # is read off ``done`` — a reconstructed member counts as available for
     # the next decode decision, exactly as in the runtime's _maybe_decode
-    group_of = np.arange(cfg.n_queries) // k
-    n_groups = (cfg.n_queries + k - 1) // k
+    group_of = np.arange(cfg.n_queries) // gk
+    n_groups = (cfg.n_queries + gk - 1) // gk
     group_parity_t = np.full((n_groups, max(r, 1)), np.inf)  # parity ready
 
     events = []
@@ -229,11 +241,11 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
         shared ``recoverable_rows`` rule over (members still unavailable,
         parities arrived) — the exact decision ``ParMFrontend._maybe_decode``
         takes, so the two layers agree on recoverability by construction."""
-        base = g * k
-        if base + k > cfg.n_queries:
+        base = g * gk
+        if base + gk > cfg.n_queries:
             return          # partial trailing group: the runtime never
                             # encodes one, so the DES doesn't decode one
-        miss = ~done[base:base + k]
+        miss = ~done[base:base + gk]
         if not miss.any():
             return
         parity_avail = np.isfinite(group_parity_t[g, :r])
@@ -257,17 +269,15 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
             for _ in range(strat.mirror):
                 pools["main"].submit(("q", qi))
             dispatch("main", t)
-            if strat.coded and qi % k == k - 1:
+            if strat.coded and qi % gk == gk - 1:
                 # group complete -> encode + dispatch r parity queries, one
                 # per parity model (§3.5); encoding happens on the frontend,
-                # so model its cost as added latency on each parity path
+                # so model its cost (scheme-owned: free for identity
+                # "encodes") as added latency on each parity path
                 g = group_of[qi]
                 for j in range(r):
                     pools[f"parity{j}"].submit(("p", (g, j)))
-                    dispatch(f"parity{j}", t + cfg.encode_ms)
-            if strat.backup:
-                pools["backup"].submit(("q", qi))
-                dispatch("backup", t)
+                    dispatch(f"parity{j}", t + enc_ms)
             if strat.slo_default:
                 push(t + cfg.slo_ms, "slo", qi)
         elif ev.kind == "finish":

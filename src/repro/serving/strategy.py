@@ -5,11 +5,11 @@ A ``ResilienceStrategy`` owns the three decisions the paper's §5.1 baselines
 differ in, so the two serving implementations cannot drift:
 
 * worker-pool layout      — ``layout(m, k, r)`` -> ``PoolLayout`` (how the
-                            redundancy budget m/k is spent: parity instances,
-                            extra deployed instances, approximate backups);
-* group assembly          — ``coded`` (form coding groups of k and dispatch
-                            parity queries) vs ``mirror`` (replicate each
-                            query) vs nothing;
+                            redundancy budget m/k is spent: parity instances
+                            or extra deployed instances);
+* group assembly          — ``coded`` (form coding groups of ``scheme.k``
+                            and dispatch parity queries) vs ``mirror``
+                            (replicate each query) vs nothing;
 * on-unavailability       — decode (coded), first-replica-wins (mirror),
                             Clipper default prediction at the SLO deadline
                             (``slo_default``), or just wait.
@@ -22,8 +22,11 @@ instance budget, §5.1):
   ``equal_resources`` m + m/k deployed instances, no redundancy.
   ``replication``     every query dispatched twice to the main pool
                       (2x resources; first completion wins).
-  ``approx_backup``   m deployed + m/k approximate backups that receive a
-                      replica of every query (§5.2.6).
+  ``approx_backup``   m deployed + m/k approximate backups (§5.2.6),
+                      expressed as the coded ``approx_backup`` *scheme*
+                      (k = 1 cheap model per group, passthrough decode) —
+                      no dedicated backup pool exists in either serving
+                      layer any more.
   ``default_slo``     m deployed; late predictions replaced by a default at
                       the SLO deadline (§4.1 baseline).
   ``none``            m deployed only (queueing-knee baseline).
@@ -48,7 +51,6 @@ class PoolLayout:
     in the threaded runtime and the parity-pool size in the simulator."""
     main: int
     parity: int = 0
-    backup: int = 0
 
 
 @dataclass(frozen=True)
@@ -56,9 +58,8 @@ class ResilienceStrategy:
     """Declarative strategy; both serving layers interpret the same flags."""
 
     name: str
-    coded: bool = False          # assemble groups of k, dispatch parity
+    coded: bool = False          # assemble groups of scheme.k, dispatch parity
     mirror: int = 1              # copies of each query sent to the main pool
-    backup: bool = False         # replica of every query to a backup pool
     slo_default: bool = False    # fulfill with the default prediction at SLO
     extra_main: bool = False     # spend the redundancy budget on main pool
     scheme: Optional[str] = None  # default CodingScheme name (coded only)
@@ -75,16 +76,23 @@ class ResilienceStrategy:
         nr = self.n_redundant(m, k)
         return PoolLayout(
             main=m + (nr * r if self.extra_main else 0),
-            parity=nr if self.coded else 0,
-            backup=nr if self.backup else 0)
+            parity=nr if self.coded else 0)
 
 
 # --------------------------------------------------------------- registry ---
 _STRATEGIES: Dict[str, ResilienceStrategy] = {}
 
 
-def register_strategy(strategy: ResilienceStrategy) -> ResilienceStrategy:
-    """Register a strategy instance under its ``name``."""
+def register_strategy(strategy: ResilienceStrategy, *,
+                      override: bool = False) -> ResilienceStrategy:
+    """Register a strategy instance under its ``name``.  Registering a
+    *different* strategy under an existing name raises unless
+    ``override=True`` (an equal re-registration is a no-op, so module
+    re-imports stay safe)."""
+    if not override and _STRATEGIES.get(strategy.name, strategy) != strategy:
+        raise ValueError(
+            f"resilience strategy {strategy.name!r} is already registered; "
+            f"pass override=True to replace it")
     _STRATEGIES[strategy.name] = strategy
     return strategy
 
@@ -113,6 +121,7 @@ def get_strategy(strategy: Union[str, ResilienceStrategy],
 register_strategy(ResilienceStrategy("parm", coded=True, scheme="sum"))
 register_strategy(ResilienceStrategy("equal_resources", extra_main=True))
 register_strategy(ResilienceStrategy("replication", mirror=2))
-register_strategy(ResilienceStrategy("approx_backup", backup=True))
+register_strategy(ResilienceStrategy("approx_backup", coded=True,
+                                     scheme="approx_backup"))
 register_strategy(ResilienceStrategy("default_slo", slo_default=True))
 register_strategy(ResilienceStrategy("none"))

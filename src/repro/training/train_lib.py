@@ -62,6 +62,42 @@ def make_parity_train_step(cfg, opt_cfg: AdamConfig, coeffs=None, remat=False):
     return step
 
 
+def make_joint_parity_train_step(cfg, opt_cfg: AdamConfig, scheme,
+                                 remat=False):
+    """Joint encoder+parity training step for the LM substrate: the learned
+    scheme's encoder (``repro.core.learned.LearnedScheme``) combines member-
+    query *embeddings* and is trained together with the r parity LMs against
+    the linear output code (DESIGN.md §7) — the embedding-space analogue of
+    ``repro.core.parity._train_joint``.
+
+    params = {"enc": scheme.enc_params,
+              "parity": [transformer params] * scheme.r}
+    batch  = {"embeds": [k, B, S, D], "teacher": [k, B, S, V]}
+
+    After training, serve with ``scheme.with_params(params["enc"])``.
+    """
+    coeffs = jnp.asarray(scheme.coeffs)                        # [r, k]
+
+    def loss_fn(params, batch):
+        enc_q = scheme.encode_with_params(
+            params["enc"], batch["embeds"])                    # [r, B, S, D]
+        target = jnp.einsum("rk,kbsv->rbsv", coeffs, batch["teacher"])
+        total = 0.0
+        for j in range(scheme.r):
+            out, aux = T.forward(cfg, params["parity"][j], embeds=enc_q[j],
+                                 remat=remat)
+            total = total + parity_mse(out, target[j]) + \
+                cfg.router_aux_coef * aux
+        return total / scheme.r
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
 def init_train_state(cfg, key, opt_cfg: AdamConfig):
     params = T.init_params(cfg, key)
     return params, adam_init(params, opt_cfg)

@@ -1,0 +1,58 @@
+"""The CI bench-regression gate (benchmarks/regression_check.py): gating
+rules — only *_ms metrics gate, missing gated metrics fail, new metrics are
+informational — and the checked-in baseline staying in sync with the smoke
+set the bench job emits."""
+import importlib.util
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "regression_check", REPO / "benchmarks" / "regression_check.py")
+regression_check = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regression_check)
+compare = regression_check.compare
+
+
+def test_gate_passes_identical_runs():
+    base = {"a_p999_ms": 40.0, "a_median_ms": 25.0, "a_reconstructions": 17}
+    rows, failures = compare(dict(base), base, threshold=0.25)
+    assert not failures
+    # counters are informational: not among gated rows
+    assert not any(r.startswith("a_reconstructions") for r in rows)
+
+
+def test_gate_trips_on_regression_but_tolerates_threshold():
+    base = {"x_p999_ms": 100.0}
+    _, failures = compare({"x_p999_ms": 124.9}, base, threshold=0.25)
+    assert not failures                         # +24.9% is within budget
+    _, failures = compare({"x_p999_ms": 126.0}, base, threshold=0.25)
+    assert failures and "x_p999_ms" in failures[0]   # +26% trips
+    _, failures = compare({"x_p999_ms": 10.0}, base, threshold=0.25)
+    assert not failures                         # improvements never trip
+
+
+def test_gate_fails_on_missing_metric_and_reports_new_ones():
+    base = {"x_p999_ms": 100.0, "y_median_ms": 10.0}
+    cur = {"y_median_ms": 10.0, "z_p999_ms": 5.0}
+    rows, failures = compare(cur, base, threshold=0.25)
+    assert any("missing" in f for f in failures)
+    assert any(r.startswith("z_p999_ms,NEW") for r in rows)
+
+
+def test_checked_in_baseline_matches_smoke_metric_set():
+    """The baseline must cover exactly the metrics the smoke bench emits —
+    a drifted baseline would silently un-gate part of the sweep.  (Values
+    are compared in CI by the bench job itself; here we pin the *schema*,
+    which also proves the gate is exercised with the current registry —
+    learned and approx_backup metrics included.)"""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        metrics = json.load(f)["metrics"]
+    from repro.core.scheme import available_schemes
+    for scheme in available_schemes():
+        assert f"smoke_scheme_{scheme}_p999_ms" in metrics, scheme
+    for strat in ("parm", "equal_resources", "replication", "none"):
+        assert f"smoke_{strat}_p999_ms" in metrics, strat
+    assert "smoke_r2_correlated_p999_ms" in metrics
+    assert all(isinstance(v, (int, float)) for v in metrics.values())

@@ -121,6 +121,58 @@ def test_decode_one_matches_general_decode():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
+def test_every_registered_scheme_roundtrips_under_all_masks():
+    """decode(encode-consistent parity outputs) must round-trip for EVERY
+    registered scheme, under EVERY missing mask with n_missing <= r.
+
+    The parity outputs are the ideal output-code combinations
+    ``coeffs @ outs`` — what a perfect parity model returns.  For schemes
+    whose input code IS the output code (sum, replication, approx_backup,
+    and the learned scheme's zero-initialised residual) that equals
+    ``encode(outs)``, which is asserted too; concat's input code is the
+    image grid (§4.2.3), so only the output-code invariant applies.
+    The learned scheme is checked at loose tolerance (its decode is the
+    shared masked least-squares solve)."""
+    from itertools import combinations
+
+    from repro.core.scheme import available_schemes
+
+    for name in available_schemes():
+        for r_req in (1, 2):
+            try:
+                scheme = get_scheme(name, k=4, r=r_req)
+            except ValueError:
+                continue              # scheme rejects this r (concat: r=1)
+            k, r = scheme.k, scheme.r
+            rng = np.random.default_rng(11 * k + r)
+            outs = jnp.asarray(rng.normal(size=(k, 5)).astype(np.float32))
+            parity = jnp.einsum("rk,k...->r...",
+                                jnp.asarray(scheme.coeffs, jnp.float32),
+                                outs)
+            if name != "concat":
+                np.testing.assert_allclose(
+                    np.asarray(scheme.encode(outs)), np.asarray(parity),
+                    atol=1e-4, err_msg=name)
+            atol = 1e-2 if name == "learned" else 1e-3
+            for n_missing in range(1, min(r, k) + 1):
+                for rows in combinations(range(k), n_missing):
+                    mask = np.zeros(k, bool)
+                    mask[list(rows)] = True
+                    corrupted = jnp.where(jnp.asarray(mask)[:, None],
+                                          999.0, outs)
+                    recon = np.asarray(scheme.decode(
+                        parity, corrupted, jnp.asarray(mask)))
+                    np.testing.assert_allclose(
+                        recon, np.asarray(outs), atol=atol,
+                        err_msg=f"{name} r={r} mask={rows}")
+                    if n_missing == 1 and r == 1:
+                        one = np.asarray(scheme.decode_one(
+                            parity[0], corrupted, rows[0]))
+                        np.testing.assert_allclose(
+                            one, np.asarray(outs[rows[0]]), atol=atol,
+                            err_msg=f"{name} decode_one j={rows[0]}")
+
+
 def test_make_code_shim_warns_and_matches_scheme():
     """Legacy make_code() still works but deprecates toward get_scheme()."""
     with pytest.warns(DeprecationWarning):

@@ -110,6 +110,20 @@ CODED_CASES = [
     ("replication", 2, None, (0, 1), (), 2, True),
     ("replication", 2, None, (0, 1), (0,), 1, False),
     ("replication", 2, None, (0, 1), (0, 1), 0, False),
+    # learned scheme: fresh from the registry the encoder's residual path is
+    # zero-initialised, so the base Vandermonde code is served exactly and
+    # the MDS recoverability rule must match sum's — including r=2 decoding
+    # two concurrent stragglers in one group
+    ("learned", 2, 1, (0,), (), 1, True),
+    ("learned", 2, 1, (0, 1), (), 1, False),
+    ("learned", 2, 2, (0, 1), (), 2, True),
+    # approx_backup-as-a-scheme: k=1 groups mean EVERY query has a cheap
+    # replica in flight; with all mains slowed past the backup's service
+    # time, both layers answer every query from the backup pool ("parity")
+    ("approx_backup", 2, None, (0,), (), 2, True),
+    # ... and with the backup pool itself lost, nothing reconstructs — the
+    # stragglers show in both layers' tails identically
+    ("approx_backup", 2, None, (0,), (0,), 0, False),
 ]
 
 

@@ -29,6 +29,31 @@ def test_parity_encode(k, B, F, dt):
                                atol=_tol(dt), rtol=_tol(dt))
 
 
+@pytest.mark.parametrize("H,r,B,F,dt", [
+    (8, 1, 4, 512, jnp.float32),
+    (16, 2, 1, 128, jnp.float32),
+    (16, 3, 2, 257, jnp.float32),
+    (32, 2, 8, 1000, jnp.bfloat16),
+])
+def test_learned_project(H, r, B, F, dt):
+    """Learned-encoder final projection kernel vs the einsum oracle,
+    including non-128-aligned feature dims and the r>1 grid axis."""
+    key = jax.random.PRNGKey(H * 13 + r)
+    h = jax.random.normal(key, (H, B, F), dt)
+    w = jax.random.normal(jax.random.PRNGKey(3), (H, r), jnp.float32)
+    got = ops.learned_project_op(h, w)
+    want = jnp.einsum("hr,hbf->rbf", w, h.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dt) * 4, rtol=_tol(dt) * 4)
+    # higher-rank trailing feature shapes ride the same reshape path
+    h4 = jax.random.normal(key, (H, B, 4, 6), jnp.float32)
+    got4 = ops.learned_project_op(h4, w)
+    want4 = jnp.einsum("hr,hbxy->rbxy", w, h4)
+    np.testing.assert_allclose(np.asarray(got4), np.asarray(want4),
+                               atol=2e-4, rtol=2e-4)
+
+
 @pytest.mark.parametrize("k,B,V,dt", [
     (2, 4, 100, jnp.float32),
     (4, 2, 1000, jnp.float32),

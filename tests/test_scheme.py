@@ -18,15 +18,22 @@ from repro.serving.strategy import (ResilienceStrategy, available_strategies,
 # ------------------------------------------------------------- registry ----
 def test_scheme_registry_round_trips():
     """Every registered name resolves, satisfies the protocol, and encodes
-    with the shape contract [k, ...] -> [r, ...]."""
-    assert {"sum", "concat", "replication"} <= set(available_schemes())
+    with the shape contract [k, ...] -> [r, ...].  A ``fixes_k`` scheme
+    (approx_backup) owns its group size: the caller's k is the redundancy
+    budget and is NOT imposed on the scheme."""
+    assert {"sum", "concat", "replication", "approx_backup",
+            "learned"} <= set(available_schemes())
     for name in available_schemes():
         s = get_scheme(name, k=4)
         assert isinstance(s, CodingScheme), name
-        assert s.k == 4 and s.name == name
+        assert s.name == name
+        if getattr(s, "fixes_k", False):
+            assert s.k == 1, name            # approx_backup: k=1 groups
+        else:
+            assert s.k == 4, name
         assert np.asarray(s.coeffs).shape == (s.r, s.k)
-        q = jnp.ones((4, 2, 16, 16, 1)) if name == "concat" else \
-            jnp.arange(4 * 2 * 8, dtype=jnp.float32).reshape(4, 2, 8)
+        q = jnp.ones((s.k, 2, 16, 16, 1)) if name == "concat" else \
+            jnp.arange(s.k * 2 * 8, dtype=jnp.float32).reshape(s.k, 2, 8)
         p = s.encode(q)
         assert p.shape[0] == s.r and p.shape[1:] == q.shape[1:], name
 
@@ -41,6 +48,48 @@ def test_get_scheme_passthrough_and_errors():
         get_scheme("sum")
     with pytest.raises(ValueError, match="backend"):
         get_scheme("sum", k=2, backend="tpu-magic")
+    # the unknown-name error lists every registered name — the operator
+    # reads valid options straight off the traceback
+    with pytest.raises(KeyError) as ei:
+        get_scheme("nope", k=2)
+    for name in available_schemes():
+        assert name in str(ei.value)
+
+
+def test_register_duplicate_scheme_requires_override():
+    """Registering a DIFFERENT factory under a taken name must raise; the
+    same factory (module re-import) and override=True pass."""
+    from repro.core.scheme import _SCHEMES
+    register_scheme("sum", _SCHEMES["sum"])      # idempotent: same factory
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme("sum", lambda **kw: None)
+    assert get_scheme("sum", k=2).name == "sum"  # registry untouched
+    try:
+        register_scheme("dup-test", lambda **kw: LinearScheme(k=kw["k"]))
+        replacement = lambda **kw: LinearScheme(k=kw["k"], name="dup-test")
+        with pytest.raises(ValueError, match="override=True"):
+            register_scheme("dup-test", replacement)
+        register_scheme("dup-test", replacement, override=True)
+        assert get_scheme("dup-test", k=2).name == "dup-test"
+    finally:
+        _SCHEMES.pop("dup-test", None)
+
+
+def test_register_duplicate_strategy_requires_override():
+    from repro.serving.strategy import _STRATEGIES
+    register_strategy(get_strategy("parm"))      # idempotent: equal instance
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy(ResilienceStrategy("parm", mirror=3))
+    assert get_strategy("parm").mirror == 1      # registry untouched
+    try:
+        register_strategy(ResilienceStrategy("dup-strat"))
+        with pytest.raises(ValueError, match="override=True"):
+            register_strategy(ResilienceStrategy("dup-strat", mirror=2))
+        register_strategy(ResilienceStrategy("dup-strat", mirror=2),
+                          override=True)
+        assert get_strategy("dup-strat").mirror == 2
+    finally:
+        _STRATEGIES.pop("dup-strat", None)
 
 
 def test_get_scheme_validates_instances_against_explicit_ask():
@@ -302,6 +351,47 @@ def test_replication_scheme_through_threaded_runtime():
         for q, x in zip(qs, xs):
             np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
                                        atol=1e-4)
+    finally:
+        fe.shutdown()
+
+
+def test_approx_backup_scheme_through_threaded_runtime():
+    """§5.2.6 as a scheme: the approx_backup strategy rides the CODED path —
+    k=1 groups, a cheap backup model in the parity pool (different params
+    AND a different architecture via parity_fwd), passthrough decode.  A
+    straggling main instance is answered by the backup's degraded-quality
+    output; fast queries keep the deployed model's exact output."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    W_cheap = np.asarray(W) + 0.05 * rng.normal(size=W.shape).astype(
+        np.float32)
+
+    def fwd(p, x):
+        return x @ p
+
+    def cheap_fwd(p, x):                     # "different architecture"
+        return np.tanh(x) @ p
+
+    fe = ParMFrontend(fwd, W, parity_params=[jnp.asarray(W_cheap)], k=2, m=2,
+                      strategy="approx_backup", parity_fwd=cheap_fwd,
+                      delay_fn=lambda i: 0.5 if i == 0 else 0.0)
+    try:
+        assert fe.scheme.name == "approx_backup"
+        assert fe.group_k == 1 and fe.r == 1     # one cheap query per group
+        assert fe.k == 2                         # budget k still sizes pools
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        st = fe.stats()
+        assert st["scheme"] == "approx_backup"
+        # the straggler (served by main instance 0) got the backup's
+        # approximate answer, bit-exact w.r.t. the cheap model
+        straggled = [q for q in qs if q.completed_by == "parity"]
+        assert straggled
+        for q in straggled:
+            np.testing.assert_allclose(
+                q.result, cheap_fwd(jnp.asarray(W_cheap), xs[q.qid]),
+                atol=1e-5)
     finally:
         fe.shutdown()
 
