@@ -129,6 +129,21 @@ def bench_batching():
         print(f"fig_batch{b}_p999_reduction,{red:.2%},qps={qps}")
 
 
+def bench_adaptive_batching():
+    """Clipper-style adaptive batching (DeploymentSpec.batching) through the
+    DES's per-batch service-time curve: above the unbatched capacity knee
+    (m=12 at 25 ms serves ~480 qps), larger max_size keeps the deployment
+    stable; redundant-work cancellation rides along, tombstoning queued
+    originals/parities the decode already answered."""
+    for b in (1, 2, 4, 8):
+        cfg = SimConfig(n_queries=NQ // 2, qps=520, m=12, k=2, seed=1,
+                        batch_max_size=b)
+        res = simulate(cfg, "parm")
+        print(f"adaptive_batch{b}_p999_ms,{res['p999_ms']:.2f},"
+              f"mean_batch={res['mean_batch_size']:.2f} "
+              f"cancelled={res.cancellations}")
+
+
 def bench_r2_multi_straggler():
     """§3.5: r=2 Vandermonde tolerates two concurrent unavailabilities per
     group. Under correlated whole-pool slowdowns (where groups regularly
@@ -183,6 +198,7 @@ def bench_ci_smoke():
         out[f"{tag}_median_ms"] = round(res["median_ms"], 3)
         out[f"{tag}_p999_ms"] = round(res["p999_ms"], 3)
         out[f"{tag}_reconstructions"] = res["reconstructions"]
+        out[f"{tag}_cancellations"] = res.cancellations
 
     n = SMOKE_NQ
     for strat in ("parm", "equal_resources", "replication", "none"):
@@ -199,6 +215,13 @@ def bench_ci_smoke():
         put(f"smoke_r{r}_correlated",
             simulate(SimConfig(n_queries=n, qps=270, m=12, k=2, r=r, seed=1),
                      "parm", scenario="correlated_slowdown"))
+    # adaptive-batching sweep above the unbatched capacity knee: the gated
+    # p999 metrics document that max_size > 1 stabilizes the overloaded
+    # deployment (smoke_batch4 well under smoke_batch1)
+    for b in (1, 2, 4):
+        put(f"smoke_batch{b}",
+            simulate(SimConfig(n_queries=n, qps=520, m=12, k=2, seed=1,
+                               batch_max_size=b), "parm"))
     for name, value in sorted(out.items()):
         print(f"{name},{value},ci_smoke")
     return out
@@ -207,8 +230,8 @@ def bench_ci_smoke():
 ALL = [bench_fig11_latency_vs_qps, bench_fig12_vary_k,
        bench_fig13_network_imbalance, bench_fig14_light_multitenancy,
        bench_fig15_approx_backup, bench_sec525_encode_decode_latency,
-       bench_batching, bench_r2_multi_straggler, bench_scenarios,
-       bench_scheme_tails]
+       bench_batching, bench_adaptive_batching, bench_r2_multi_straggler,
+       bench_scenarios, bench_scheme_tails]
 
 
 def main():

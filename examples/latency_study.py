@@ -1,19 +1,23 @@
-"""Tail-latency study (paper Fig 11) via the discrete-event simulator.
+"""Tail-latency study (paper Fig 11) via the sim engine of the declarative
+serving API.
 
     PYTHONPATH=src python examples/latency_study.py [--qps 270] [--m 12] \
-        [--r 2] [--scheme learned] [--scenario crash]
+        [--r 2] [--scheme learned] [--scenario crash] [--batch-size 4]
 
-``--scenario`` picks a registered fault scenario (``crash``, ``bursty``,
-``storm``, ...); omitted, the paper's background network-shuffle load runs.
-``--scheme`` / ``--r`` select the code served by the coded strategies — any
-registered name, including ``learned`` and ``approx_backup`` (§3.5,
-DESIGN.md §7).
+One ``DeploymentSpec`` per strategy, one shared workload ``Trace``:
+``deploy(spec, engine="sim").replay(trace)`` — the exact spec a threaded
+deployment would consume (DESIGN.md §8).  ``--scenario`` picks a registered
+fault scenario (``crash``, ``bursty``, ``storm``, ...); omitted, the paper's
+background network-shuffle load runs.  ``--scheme`` / ``--r`` select the code
+served by the coded strategies — any registered name, including ``learned``
+and ``approx_backup`` (§3.5, DESIGN.md §7).  ``--batch-size`` sweeps the
+adaptive ``BatchingPolicy`` through the DES's per-batch service-time curve.
 """
 import argparse
 
 from repro.core.scheme import available_schemes
+from repro.serving.api import BatchingPolicy, DeploymentSpec, Trace, deploy
 from repro.serving.scenarios import available_scenarios
-from repro.serving.simulator import SimConfig, simulate
 
 
 def main():
@@ -30,25 +34,30 @@ def main():
     ap.add_argument("--scenario", default=None,
                     choices=available_scenarios(),
                     help="fault scenario (default: legacy shuffle load)")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="adaptive-batching max batch size (main pool)")
     args = ap.parse_args()
 
-    cfg = SimConfig(n_queries=args.n, qps=args.qps, m=args.m, k=args.k,
-                    r=args.r)
+    trace = Trace(n_queries=args.n, qps=args.qps)
     load = args.scenario or "background network shuffles"
     print(f"m={args.m} deployed instances, k={args.k} "
           f"({1/args.k:.0%} redundancy), r={args.r}, {args.qps} qps, "
-          f"{args.n} queries, load: {load}\n")
+          f"{args.n} queries, load: {load}, "
+          f"batching max_size={args.batch_size}\n")
     print(f"{'strategy':18s} {'scheme':12s} {'median':>8s} {'p99':>8s} "
-          f"{'p99.9':>8s} {'gap':>8s} {'recon':>7s}")
+          f"{'p99.9':>8s} {'gap':>8s} {'recon':>7s} {'cancel':>7s}")
     for strat in ("none", "equal_resources", "parm", "approx_backup",
                   "replication"):
-        r = simulate(cfg, strat, scheme=args.scheme,
-                     scenario=args.scenario)
+        spec = DeploymentSpec(
+            strategy=strat, scheme=args.scheme, k=args.k, r=args.r,
+            m=args.m, scenario=args.scenario,
+            batching=BatchingPolicy(max_size=args.batch_size))
+        r = deploy(spec, engine="sim").replay(trace)
         gap = r["p999_ms"] - r["median_ms"]
         print(f"{strat:18s} {str(r['scheme']):12s} "
               f"{r['median_ms']:7.1f}ms {r['p99_ms']:7.1f}ms "
               f"{r['p999_ms']:7.1f}ms {gap:7.1f}ms "
-              f"{r['reconstructions']:7d}")
+              f"{r['reconstructions']:7d} {r.cancellations:7d}")
 
 
 if __name__ == "__main__":

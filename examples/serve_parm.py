@@ -1,12 +1,15 @@
 """End-to-end ParM serving driver (the paper-kind end-to-end example:
 serve a small model with batched requests through the coded frontend).
 
-    PYTHONPATH=src python examples/serve_parm.py [--n 120] [--k 2] [--m 4]
+    PYTHONPATH=src python examples/serve_parm.py [--n 120] [--k 2] [--m 4] \
+        [--batch-size 4]
 
-Trains a deployed classifier + parity model, then serves a request stream
-through the threaded frontend with an injected straggler instance, and
-reports latency percentiles + how each prediction was completed
-(model / parity-reconstruction), plus accuracy of each path.
+Trains a deployed classifier + parity model, declares the deployment once as
+a ``DeploymentSpec`` and serves a request stream through
+``deploy(spec, engine="threads")`` with an injected straggler instance,
+reporting latency percentiles + how each prediction was completed
+(model / parity-reconstruction), plus accuracy of each path.  The SAME spec
+replays through the simulator: ``deploy(spec, engine="sim").replay(trace)``.
 """
 import argparse
 import time
@@ -17,7 +20,7 @@ import numpy as np
 from repro.core.parity import train_parity_models
 from repro.data.pipeline import batched, cluster_images
 from repro.models.cnn import build
-from repro.serving.runtime import ParMFrontend
+from repro.serving.api import BatchingPolicy, DeploymentSpec, Trace, deploy
 from repro.training.loss import softmax_xent
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
@@ -30,6 +33,8 @@ def main():
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--straggle-ms", type=float, default=150.0)
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="adaptive-batching max batch size (main pool)")
     args = ap.parse_args()
 
     # train deployed + parity models ---------------------------------------
@@ -59,19 +64,21 @@ def main():
     def delay(iid):
         return args.straggle_ms / 1e3 if iid in slow else 0.0
 
-    fe = ParMFrontend(jfwd, params, parity_params=pp[0], k=args.k, m=args.m,
-                      strategy="parm", scheme=scheme, delay_fn=delay)
-    try:
+    spec = DeploymentSpec(
+        fwd=jfwd, params=params, parity_params=pp[0], strategy="parm",
+        scheme=scheme, k=args.k, m=args.m, delay_fn=delay,
+        batching=BatchingPolicy(max_size=args.batch_size, max_delay_ms=2.0))
+    with deploy(spec, engine="threads") as sess:
         t0 = time.perf_counter()
-        qs = []
+        futs = []
         for i in range(args.n):
-            qs.append(fe.submit(i, xt[i:i + 1]))
+            futs.append(sess.submit(xt[i:i + 1]))
             time.sleep(0.008)                  # ~125 qps arrival stream
-        ok = fe.wait_all(timeout=120)
+        ok = sess.wait_all(timeout=120)
         wall = time.perf_counter() - t0
         assert ok, "unanswered queries!"
-        stats = fe.stats()
-        lat = np.array([q.latency_ms for q in qs])
+        stats = sess.stats()
+        lat = np.array([f.latency_ms for f in futs])
         print(f"\nserved {args.n} queries in {wall:.2f}s "
               f"(m={args.m} deployed + {max(1, args.m // args.k)} parity, "
               f"instance 0 straggles {args.straggle_ms:.0f} ms)")
@@ -79,15 +86,27 @@ def main():
               f"p90={np.percentile(lat, 90):.1f}ms "
               f"p99={np.percentile(lat, 99):.1f}ms max={lat.max():.1f}ms")
         print(f"completed_by: {stats['completed_by']}")
+        if stats["mean_batch_size"] > 1:
+            print(f"adaptive batching: mean batch "
+                  f"{stats['mean_batch_size']:.2f} over {stats['batches']} "
+                  "inference calls")
+        if stats["cancellations"]:
+            print(f"redundant work cancelled: {stats['cancellations']} "
+                  "queued items tombstoned")
         for how in ("model", "parity"):
-            sel = [q for q in qs if q.completed_by == how]
+            sel = [f for f in futs if f.completed_by == how]
             if sel:
-                acc = np.mean([np.argmax(q.result) == yt[q.qid]
-                               for q in sel])
+                acc = np.mean([np.argmax(f.result()) == yt[f.qid]
+                               for f in sel])
                 print(f"accuracy of '{how}' predictions: {acc:.3f} "
                       f"(n={len(sel)})")
-    finally:
-        fe.shutdown()
+
+    # the SAME spec replays through the simulator: the DES charges its
+    # calibrated service-time model (not this tiny MLP's real latency), so
+    # this is the 100k-query-scale view of the deployment just served
+    sim = deploy(spec, engine="sim").replay(Trace(n_queries=20_000,
+                                                  qps=125.0))
+    print(f"\nsim replay of the same spec: {sim.summary()}")
 
 
 if __name__ == "__main__":

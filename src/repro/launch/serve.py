@@ -5,11 +5,12 @@
 
 Builds a reduced deployed LM, distills a parity LM for it (embedding-space
 addition code — the ``sum`` entry of the scheme registry, DESIGN.md §2), then
-serves single-sequence queries through the threaded ParM frontend with an
-injected straggler instance and prints latency + completion-path statistics.
-Degraded-mode predictions are the decoder's subtraction reconstructions. The
-``--strategy`` flag picks any registered ``ResilienceStrategy``
-(DESIGN.md §3).
+serves single-sequence queries through the declarative serving API
+(``deploy(DeploymentSpec(...))`` — DESIGN.md §8) with an injected straggler
+instance and prints latency + completion-path statistics.  Degraded-mode
+predictions are the decoder's subtraction reconstructions. The ``--strategy``
+flag picks any registered ``ResilienceStrategy`` (DESIGN.md §3);
+``--batch-size`` enables Clipper-style adaptive batching on the main pool.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_config
 from repro.data.pipeline import lm_batches
 from repro.models import transformer as T
-from repro.serving.runtime import ParMFrontend
+from repro.serving.api import BatchingPolicy, DeploymentSpec, deploy
 from repro.serving.strategy import available_strategies
 from repro.training.optim import AdamConfig, adam_init
 from repro.training.train_lib import (make_parity_train_step,
@@ -41,6 +42,10 @@ def main():
                     choices=available_strategies())
     ap.add_argument("--slo-ms", type=float, default=250.0,
                     help="deadline for the default_slo strategy")
+    ap.add_argument("--batch-size", type=int, default=1,
+                    help="adaptive-batching max batch size (main pool)")
+    ap.add_argument("--batch-delay-ms", type=float, default=2.0,
+                    help="max time a worker holds a batch open")
     ap.add_argument("--train-steps", type=int, default=20)
     ap.add_argument("--parity-steps", type=int, default=40)
     ap.add_argument("--straggle-ms", type=float, default=120.0)
@@ -104,19 +109,23 @@ def main():
         # returned at the SLO deadline
         extra = dict(slo_ms=args.slo_ms,
                      default_prediction=np.zeros((1, cfg.vocab), np.float32))
-    fe = ParMFrontend(deployed_fwd, deployed, parity_params=parity,
-                      k=k, m=args.m, strategy=args.strategy, delay_fn=delay,
-                      **extra)
-    try:
+    spec = DeploymentSpec(
+        fwd=deployed_fwd, params=deployed, parity_params=parity,
+        strategy=args.strategy, k=k, m=args.m, delay_fn=delay,
+        batching=BatchingPolicy(max_size=args.batch_size,
+                                max_delay_ms=args.batch_delay_ms),
+        **extra)
+    with deploy(spec, engine="threads") as sess:
         rng = np.random.default_rng(0)
-        qs = []
+        futs = []
         for i in range(args.n):
             toks = jnp.asarray(data[rng.integers(len(data))][:1, :S])
-            qs.append(fe.submit(i, embed(toks)))
+            futs.append(sess.submit(embed(toks)))
             time.sleep(0.01)
-        assert fe.wait_all(timeout=120), "unanswered queries"
-        stats = fe.stats()
-        lat = np.array([q.latency_ms for q in qs])
+        assert sess.wait_all(timeout=120), "unanswered queries"
+        stats = sess.stats()
+        lat = np.array([f.latency_ms for f in futs])
+        fe = sess.frontend
         lay = fe.strategy.layout(args.m, k, fe.r)
         pools = f"main={lay.main}" + \
             (f" parity={lay.parity}x{fe.r}" if lay.parity else "")
@@ -125,12 +134,17 @@ def main():
         print(f"latency p50={np.percentile(lat, 50):.1f}ms "
               f"p99={np.percentile(lat, 99):.1f}ms max={lat.max():.1f}ms")
         print(f"completed_by: {stats['completed_by']}")
-        recon = [q for q in qs if q.completed_by == "parity"]
+        if stats["mean_batch_size"] > 1:
+            print(f"batching: {stats['batches']} inference calls, "
+                  f"mean batch {stats['mean_batch_size']:.2f}")
+        if stats["cancellations"]:
+            print(f"redundant work cancelled: "
+                  f"{stats['cancelled_queries']} originals, "
+                  f"{stats['cancelled_parities']} parity queries")
+        recon = [f for f in futs if f.completed_by == "parity"]
         if recon:
             print(f"{len(recon)} predictions reconstructed from parity "
                   "outputs (degraded mode)")
-    finally:
-        fe.shutdown()
 
 
 if __name__ == "__main__":

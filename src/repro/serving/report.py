@@ -1,0 +1,89 @@
+"""The one typed serving report shared by BOTH serving layers.
+
+``ServingReport`` replaces the two hand-rolled result dicts the threaded
+``ParMFrontend.stats()`` and the DES ``simulate()`` used to return.  It is a
+frozen dataclass — fields are the contract, and a field added here shows up
+in both engines at once — but it also implements the ``Mapping`` protocol, so
+every existing ``report["p999_ms"]``-style call site keeps working unchanged.
+
+New in this report (vs the old dicts):
+
+* ``engine``                           — ``"threads"`` or ``"sim"``;
+* ``completed_by``                     — per-completion-path counts from the
+                                         DES too (the runtime always had them);
+* ``cancelled_queries`` / ``cancelled_parities`` — redundant-work
+  cancellation: originals tombstoned after a parity decode beat them (and
+  mirror copies of already-answered queries), and undispatched parity queries
+  dropped because every original in their group already finished;
+* ``batches`` / ``mean_batch_size``    — adaptive-batching bookkeeping: how
+  many main-pool inference calls ran and how many queries each carried.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Mapping
+from dataclasses import dataclass, field, fields
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True, eq=True)
+class ServingReport(Mapping):
+    """Latency percentiles + completion bookkeeping for one serving run.
+
+    Queries flushed at shutdown appear in ``completed_by`` but are excluded
+    from the latency percentiles and ``n`` — their finish time is a shutdown
+    artifact, not a latency.
+    """
+
+    engine: str = "threads"
+    strategy: str = ""
+    scheme: Optional[str] = None
+    scenario: Optional[str] = None
+    n: int = 0
+    median_ms: float = float("nan")
+    p99_ms: float = float("nan")
+    p999_ms: float = float("nan")
+    mean_ms: float = float("nan")
+    max_ms: float = float("nan")
+    # hash=False: the dict would break the frozen dataclass's generated
+    # __hash__; equality still compares it field-wise
+    completed_by: Dict[str, int] = field(default_factory=dict, hash=False)
+    reconstructions: int = 0
+    cancelled_queries: int = 0
+    cancelled_parities: int = 0
+    batches: int = 0
+    mean_batch_size: float = 1.0
+
+    # -- Mapping protocol: old ``stats()["p999_ms"]`` call sites keep
+    # working.  The view is exactly the dataclass fields plus the derived
+    # ``cancellations`` total — NOT arbitrary attributes, so methods are
+    # not "in" the report and ``dict(report)`` round-trips every readable
+    # key (including the one the examples read as ``stats["cancellations"]``)
+    def _key_names(self):
+        return [f.name for f in fields(self)] + ["cancellations"]
+
+    def __getitem__(self, key):
+        if key in self._key_names():
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def __iter__(self):
+        return iter(self._key_names())
+
+    def __len__(self):
+        return len(self._key_names())
+
+    @property
+    def cancellations(self) -> int:
+        """Total redundant work skipped at dequeue, both directions."""
+        return self.cancelled_queries + self.cancelled_parities
+
+    def summary(self) -> str:
+        """One human-readable line (examples, launchers)."""
+        return (
+            f"[{self.engine}] {self.strategy}"
+            f"{'/' + self.scheme if self.scheme else ''}"
+            f" n={self.n} median={self.median_ms:.1f}ms"
+            f" p99={self.p99_ms:.1f}ms p99.9={self.p999_ms:.1f}ms"
+            f" recon={self.reconstructions} cancelled={self.cancellations}"
+        )

@@ -13,6 +13,24 @@ and the code itself by a ``CodingScheme`` (``core/scheme.py``) — the same two
 objects the DES in ``repro.serving.simulator`` consumes, so the threaded and
 simulated serving paths cannot drift. See DESIGN.md for the plugin API.
 
+This module is the **threads engine** behind the declarative serving surface
+in ``repro.serving.api``: ``deploy(DeploymentSpec(...), engine="threads")``
+constructs a ``ParMFrontend`` from the spec, and the legacy kwarg constructor
+is a shim that folds its arguments into a ``DeploymentSpec`` first.  Two
+serving-policy behaviors live here rather than in the strategy, because they
+are properties of the *frontend*, not of the code:
+
+* **adaptive batching** (``DeploymentSpec.batching``): main-pool workers
+  dequeue up to ``max_size`` waiting queries per inference call (optionally
+  holding the batch open ``max_delay_ms`` for late joiners), stack them along
+  the batch dimension, and split the stacked output back per query;
+* **redundant-work cancellation**: a queued query whose prediction already
+  arrived (parity decode beat it, a mirror replica won, or the SLO default
+  fired) is tombstoned and skipped at dequeue, and an undispatched parity
+  query whose group has every original answered is dropped the same way —
+  both counted in ``ServingReport.cancelled_queries`` /
+  ``cancelled_parities``.
+
 Used by the end-to-end example (examples/serve_parm.py) and integration tests;
 the 100k-query tail studies use the DES in ``repro.serving.simulator``.
 """
@@ -29,8 +47,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheme import get_scheme, recoverable_rows
+from repro.serving.api import BatchingPolicy, DeploymentSpec
+from repro.serving.report import ServingReport
 from repro.serving.scenarios import get_scenario, instance_id
 from repro.serving.strategy import get_strategy
+
+# worker-shutdown sentinel: one per worker is pushed onto its pool queue so a
+# blocking ``get()`` wakes immediately — no idle polling, sub-ms shutdown
+_SHUTDOWN = object()
+
+# not-passed marker for the legacy kwarg surface: any kwarg the caller
+# actually supplied is `is not _UNSET`, so spec-vs-kwargs conflict detection
+# needs no shadow table of defaults
+_UNSET = object()
 
 
 @dataclass
@@ -56,10 +85,27 @@ class Query:
 
 
 class ModelInstance(threading.Thread):
-    """Worker pulling (tag, payload) items off a shared pool queue."""
+    """Worker pulling (tag, payload, x) items off a shared pool queue.
+
+    ``skip_fn(tag, payload)`` — redundant-work tombstone check, consulted at
+    dequeue (an item that became pointless while queued is dropped, never
+    served).  ``batching`` — adaptive batching policy; when ``max_size > 1``
+    the worker collects up to that many queued items per inference call,
+    stacks them along the batch dim and splits the output back per item.
+    ``on_done_batch([(payload, out), ...])`` — batch-atomic completion: the
+    whole batch's outputs are handed over in ONE call, so the consumer can
+    record every batch-mate before any decode decision runs (delivering them
+    one at a time would let a parity decode "reconstruct" a member whose
+    exact output sits later in the same batch).  ``on_batch(n)`` —
+    bookkeeping callback, once per inference call.
+    """
 
     def __init__(self, iid, pool_q, fwd, params, on_done,
-                 delay_fn: Optional[Callable[[int], float]] = None):
+                 delay_fn: Optional[Callable[[int], float]] = None,
+                 skip_fn: Optional[Callable] = None,
+                 batching: Optional[BatchingPolicy] = None,
+                 on_batch: Optional[Callable[[int], None]] = None,
+                 on_done_batch: Optional[Callable] = None):
         super().__init__(daemon=True)
         self.iid = iid
         self.pool_q = pool_q
@@ -67,25 +113,96 @@ class ModelInstance(threading.Thread):
         self.params = params
         self.on_done = on_done
         self.delay_fn = delay_fn
+        self.skip_fn = skip_fn
+        self.batching = batching
+        self.on_batch = on_batch
+        self.on_done_batch = on_done_batch
         self.stop = False
+
+    def _collect(self, first):
+        """Fill a batch: up to ``max_size`` items, holding the batch open at
+        most ``max_delay_ms`` after the first dequeue (Clipper-style)."""
+        items = [first]
+        deadline = time.perf_counter() + self.batching.max_delay_ms / 1e3
+        while len(items) < self.batching.max_size:
+            wait = deadline - time.perf_counter()
+            try:
+                item = self.pool_q.get(timeout=wait) if wait > 0 \
+                    else self.pool_q.get_nowait()
+            except queue.Empty:
+                break
+            if item is _SHUTDOWN:
+                self.stop = True        # serve what we have, then exit
+                break
+            if self.skip_fn is not None and self.skip_fn(item[0], item[1]):
+                continue                # tombstoned while queued
+            items.append(item)
+        return items
 
     def run(self):
         while not self.stop:
-            try:
-                item = self.pool_q.get(timeout=0.05)
-            except queue.Empty:
+            item = self.pool_q.get()
+            if item is _SHUTDOWN:
+                break
+            if self.stop:
+                # shutdown raced our dequeue: abandon the item, but route it
+                # through the same tombstone accounting the post-join queue
+                # drain applies, so redundant work is still counted
+                if self.skip_fn is not None:
+                    self.skip_fn(item[0], item[1])
                 continue
-            tag, payload, x = item
+            if self.skip_fn is not None and self.skip_fn(item[0], item[1]):
+                continue            # tombstoned while queued
+            if self.batching is not None and self.batching.max_size > 1:
+                items = self._collect(item)
+            else:
+                items = [item]
             if self.delay_fn:
                 d = self.delay_fn(self.iid)
                 if d > 0:
                     time.sleep(d)
-            out = np.asarray(self.fwd(self.params, x))
-            self.on_done(tag, payload, out)
+            if len(items) == 1:
+                tag, payload, x = items[0]
+                out = np.asarray(self.fwd(self.params, x))
+                if self.on_batch is not None:
+                    self.on_batch(1)
+                self.on_done(tag, payload, out)
+            else:
+                # one inference call per trailing-shape group: same-shape
+                # queries stack along the leading batch dim and the output
+                # splits back per item.  Mixed shapes are NOT padded — for a
+                # general fwd, padding would change the outputs — they just
+                # cost one extra call, instead of a ValueError that would
+                # kill the worker and hang every dequeued future
+                groups = {}
+                for i, it in enumerate(items):
+                    groups.setdefault(np.shape(it[2])[1:], []).append(i)
+                outs = [None] * len(items)
+                for idxs in groups.values():
+                    stacked = np.concatenate([items[i][2] for i in idxs],
+                                             axis=0)
+                    out = np.asarray(self.fwd(self.params, stacked))
+                    if self.on_batch is not None:
+                        self.on_batch(len(idxs))
+                    ofs = 0
+                    for i in idxs:
+                        sz = items[i][2].shape[0]
+                        outs[i] = out[ofs:ofs + sz]
+                        ofs += sz
+                if self.on_done_batch is not None:
+                    self.on_done_batch(
+                        [(it[1], o) for it, o in zip(items, outs)])
+                else:
+                    for (tag, payload, _), o in zip(items, outs):
+                        self.on_done(tag, payload, o)
 
 
 class ParMFrontend:
     """Frontend: group assembly, encode, dispatch, decode-on-unavailability.
+
+    The canonical constructor is ``ParMFrontend(spec=DeploymentSpec(...))``
+    (what ``repro.serving.api.deploy`` calls); the legacy kwarg surface keeps
+    working by folding its arguments into a spec first.
 
     ``strategy`` — a ``ResilienceStrategy`` or registered name
     (``parm`` | ``equal_resources`` | ``replication`` | ``approx_backup`` |
@@ -103,12 +220,15 @@ class ParMFrontend:
     alias for ``parity_params=``.
     """
 
-    def __init__(self, fwd, deployed_params, parity_params=None, *, k=2,
-                 r=None, m=4, strategy="parm", scheme=None, backend=None,
-                 mode=None, delay_fn=None, encode_fn=None, decode_fn=None,
-                 default_prediction=None, slo_ms=None, backup_params=None,
-                 parity_fwd=None, scenario=None, scenario_seed=0,
-                 scenario_time_scale=1.0, scenario_horizon_ms=600_000.0):
+    def __init__(self, fwd=_UNSET, deployed_params=_UNSET,
+                 parity_params=_UNSET, *, k=_UNSET, r=_UNSET, m=_UNSET,
+                 strategy=_UNSET, scheme=_UNSET, backend=_UNSET, mode=_UNSET,
+                 delay_fn=_UNSET, encode_fn=_UNSET, decode_fn=_UNSET,
+                 default_prediction=_UNSET, slo_ms=_UNSET,
+                 backup_params=_UNSET, parity_fwd=_UNSET, scenario=_UNSET,
+                 scenario_seed=_UNSET, scenario_time_scale=_UNSET,
+                 scenario_horizon_ms=_UNSET, batching=_UNSET,
+                 spec: Optional[DeploymentSpec] = None):
         """``r > 1`` (paper §3.5): ``parity_params`` is a list of r parity
         models, each trained to the j-th Vandermonde combination; r parity
         queries are dispatched per coding group and the decoder solves the
@@ -130,36 +250,85 @@ class ParMFrontend:
         to ``scenario_horizon_ms`` sim-ms, so injection stops after
         ``scenario_horizon_ms * scenario_time_scale`` wall-clock ms —
         raise it for longer experiments."""
-        if mode is not None:
+        passed = {name: v for name, v in {
+            "fwd": fwd, "deployed_params": deployed_params,
+            "parity_params": parity_params, "k": k, "r": r, "m": m,
+            "strategy": strategy, "scheme": scheme, "backend": backend,
+            "mode": mode, "delay_fn": delay_fn, "encode_fn": encode_fn,
+            "decode_fn": decode_fn,
+            "default_prediction": default_prediction, "slo_ms": slo_ms,
+            "backup_params": backup_params, "parity_fwd": parity_fwd,
+            "scenario": scenario, "scenario_seed": scenario_seed,
+            "scenario_time_scale": scenario_time_scale,
+            "scenario_horizon_ms": scenario_horizon_ms,
+            "batching": batching}.items() if v is not _UNSET}
+        if spec is None:
+            # legacy kwarg surface: remap the old spellings, then build the
+            # spec from ONLY the kwargs actually passed — every default
+            # comes from DeploymentSpec itself, so the two construction
+            # surfaces cannot drift
+            kw = dict(passed)
+            if "mode" in kw:
+                warnings.warn(
+                    "ParMFrontend(mode=...) is deprecated; use strategy=",
+                    DeprecationWarning, stacklevel=2)
+                kw["strategy"] = kw.pop("mode")
+            if "backup_params" in kw:
+                warnings.warn(
+                    "ParMFrontend(backup_params=...) is deprecated; "
+                    "approximate backups are the coded 'approx_backup' "
+                    "scheme now — pass parity_params= (and parity_fwd= for "
+                    "a cheaper architecture)",
+                    DeprecationWarning, stacklevel=2)
+                bp = kw.pop("backup_params")
+                if kw.get("parity_params") is None:
+                    kw["parity_params"] = bp
+            if "deployed_params" in kw:
+                kw["params"] = kw.pop("deployed_params")
+            if kw.get("batching") is None:         # legacy "no policy"
+                kw.pop("batching", None)
+            spec = DeploymentSpec(**kw)
             warnings.warn(
-                "ParMFrontend(mode=...) is deprecated; use strategy=",
-                DeprecationWarning, stacklevel=2)
-            strategy = mode
-        if backup_params is not None:
-            warnings.warn(
-                "ParMFrontend(backup_params=...) is deprecated; approximate "
-                "backups are the coded 'approx_backup' scheme now — pass "
-                "parity_params= (and parity_fwd= for a cheaper architecture)",
-                DeprecationWarning, stacklevel=2)
-            if parity_params is None:
-                parity_params = backup_params
-        self.strategy = get_strategy(strategy)
+                "the ParMFrontend kwarg surface is a legacy shim; build a "
+                "DeploymentSpec and use repro.serving.api.deploy (or "
+                "ParMFrontend(spec=...))", DeprecationWarning, stacklevel=2)
+        elif passed:
+            # a legacy kwarg next to spec= would be silently ignored —
+            # deploying with different semantics than the caller wrote
+            raise TypeError(
+                f"pass either spec= or the legacy kwargs, not both "
+                f"(also got {sorted(passed)})")
+        self.spec = spec
+        self._build(spec)
+
+    # ------------------------------------------------------------------
+    def _build(self, spec: DeploymentSpec):
+        if spec.fwd is None or spec.params is None:
+            # fail at construction, not as a worker-thread crash that only
+            # surfaces as futures hanging until their timeout
+            raise ValueError(
+                "ParMFrontend runs real inference: fwd= and "
+                "deployed_params= (spec.fwd / spec.params) are required")
+        fwd, m, k = spec.fwd, spec.m, spec.k
+        self.strategy = get_strategy(spec.strategy)
+        scheme = spec.scheme
         if scheme is None:
             scheme = self.strategy.scheme or "sum"
         # validates k / r / backend against scheme instances
-        self.scheme = get_scheme(scheme, k=k, r=r, backend=backend)
+        self.scheme = get_scheme(scheme, k=k, r=spec.r, backend=spec.backend)
         self.k = k
         # group assembly follows the scheme's own group size: a fixes_k
         # scheme (approx_backup) decouples it from the budget k
         self.group_k = self.scheme.k if self.strategy.coded else k
         # a scheme may fix its own parity count (replication: r = k)
         self.r = self.scheme.r if self.strategy.coded else \
-            (1 if r is None else r)
-        self.encode_fn = encode_fn or (
+            (1 if spec.r is None else spec.r)
+        self.batching = spec.batching
+        self.encode_fn = spec.encode_fn or (
             lambda q: np.asarray(self.scheme.encode(q)))
-        self.decode_fn = decode_fn
-        self.default_prediction = default_prediction
-        self.slo_ms = slo_ms
+        self.decode_fn = spec.decode_fn
+        self.default_prediction = spec.default_prediction
+        self.slo_ms = spec.slo_ms
         self.queries = {}
         self.groups = {}   # gid -> {"members", "outs", "parity": {j: out}}
         self.gid_of = {}
@@ -167,11 +336,20 @@ class ParMFrontend:
         self._next_gid = 0
         self._pending_group = []
         self._early_outs = {}   # outputs that beat their group's assembly
+        self._timers = set()    # armed default_slo timers; cancelled at
+                                # shutdown so none fires into a dead frontend
+        self._shutdown = False
+        self.cancelled_queries = 0    # tombstoned originals skipped at dequeue
+        self.cancelled_parities = 0   # undispatched parities dropped
+        self._n_batches = 0           # main-pool inference calls
+        self._n_batch_queries = 0     # queries those calls carried
 
         layout = self.strategy.layout(m, k, self.r)
+        scenario = spec.scenario
         if scenario is None:
             scenario = self.strategy.scenario
         self.scenario = None
+        delay_fn = spec.delay_fn
         if scenario is not None:
             # fault-injection adapter: the scenario's hazard windows become
             # per-instance delays, composed with any user delay_fn
@@ -181,21 +359,27 @@ class ParMFrontend:
                 for j in range(self.r):
                     pool_sizes[f"parity{j}"] = layout.parity
             delay_fn = self.scenario.delay_fn(
-                pool_sizes, seed=scenario_seed,
-                horizon_ms=scenario_horizon_ms,
-                time_scale=scenario_time_scale, extra=delay_fn)
+                pool_sizes, seed=spec.scenario_seed,
+                horizon_ms=spec.scenario_horizon_ms,
+                time_scale=spec.scenario_time_scale, extra=delay_fn)
         self.main_q = queue.Queue()
         self.workers = []
+        main_batching = self.batching if self.batching.max_size > 1 else None
         for i in range(layout.main):
             w = ModelInstance(instance_id("main", i), self.main_q, fwd,
-                              deployed_params, self._on_model_done, delay_fn)
+                              spec.params, self._on_model_done, delay_fn,
+                              skip_fn=self._should_skip,
+                              batching=main_batching,
+                              on_batch=self._note_batch,
+                              on_done_batch=self._on_model_batch_done)
             w.start()
             self.workers.append(w)
         if self.strategy.coded:
+            parity_params = spec.parity_params
             if parity_params is None:
                 # replication-style schemes: the "parity model" is the
                 # deployed model itself (decode is a passthrough)
-                parity_params = [deployed_params] * self.r
+                parity_params = [spec.params] * self.r
             elif not isinstance(parity_params, (list, tuple)):
                 parity_params = [parity_params]
             assert len(parity_params) == self.r, \
@@ -206,8 +390,10 @@ class ParMFrontend:
                 self.parity_qs.append(pq)
                 for i in range(layout.parity):
                     w = ModelInstance(instance_id(f"parity{j}", i), pq,
-                                      parity_fwd or fwd, parity_params[j],
-                                      self._on_parity_done, delay_fn)
+                                      spec.parity_fwd or fwd,
+                                      parity_params[j],
+                                      self._on_parity_done, delay_fn,
+                                      skip_fn=self._should_skip)
                     w.start()
                     self.workers.append(w)
             self.parity_q = self.parity_qs[0]      # back-compat alias
@@ -218,6 +404,12 @@ class ParMFrontend:
         q = Query(qid, x, arrival=time.perf_counter())
         to_encode = None
         with self.lock:
+            if self._shutdown:
+                # the workers already consumed their shutdown sentinels —
+                # enqueuing now would hand back a future that hangs until
+                # its timeout instead of failing fast
+                raise RuntimeError(
+                    "ParMFrontend is shut down; deploy a new session")
             self.queries[qid] = q
             if self.strategy.coded:
                 self._pending_group.append(qid)
@@ -234,8 +426,12 @@ class ParMFrontend:
                                         "parity": {}}
                     to_encode = (gid, np.stack(
                         [self.queries[m].data for m in members]))
-        for _ in range(self.strategy.mirror):
-            self.main_q.put(("query", qid, x))
+            # enqueue under the same lock as the _shutdown check: a
+            # concurrent shutdown() either sees these items in its queue
+            # drain, or this submit already raised — never an item enqueued
+            # onto dead workers after the drain
+            for _ in range(self.strategy.mirror):
+                self.main_q.put(("query", qid, x))
         if to_encode is not None:
             # frontend-side encode (1/k network overhead, §3.1); r parity
             # queries, one per parity model (§3.5). Runs outside the lock —
@@ -244,39 +440,100 @@ class ParMFrontend:
             # before these puts
             gid, stacked = to_encode
             parities = self.encode_fn(stacked)
-            for j, pq in enumerate(self.parity_qs):
-                pq.put(("parity", (gid, j), parities[j]))
+            with self.lock:
+                dead = self._shutdown
+                if not dead:
+                    for j, pq in enumerate(self.parity_qs):
+                        pq.put(("parity", (gid, j), parities[j]))
+            if dead:
+                # shutdown won the race while we encoded: flush this
+                # group's unanswered members like any shutdown leftover
+                # instead of leaving their futures to hang
+                for m in self.groups[gid]["members"]:
+                    q_ = self.queries.get(m)
+                    if q_ is not None and not q_.event.is_set():
+                        q_.fulfill(self.default_prediction, "flushed")
         if self.strategy.slo_default and self.slo_ms is not None:
-            t = threading.Timer(self.slo_ms / 1e3, self._default_fire,
-                                args=(qid,))
+            t = threading.Timer(self.slo_ms / 1e3, self._default_fire)
+            t.args = (qid, t)
             t.daemon = True
-            t.start()
+            with self.lock:
+                if not self._shutdown:
+                    self._timers.add(t)
+                    t.start()
         return q
 
-    def _default_fire(self, qid):
-        q = self.queries[qid]
-        q.fulfill(self.default_prediction, "default")
+    def _default_fire(self, qid, timer):
+        with self.lock:
+            # guard against firing into a torn-down frontend: shutdown()
+            # cancels armed timers and flips the flag first
+            if self._shutdown:
+                return
+            self._timers.discard(timer)
+            q = self.queries.get(qid)
+        if q is not None:
+            q.fulfill(self.default_prediction, "default")
+
+    # ------------------------------------------------------------------
+    def _should_skip(self, tag, payload):
+        """Redundant-work tombstone check, called by workers at dequeue.
+
+        An *original* whose prediction already arrived (parity decode won,
+        a mirror replica won, or the SLO default fired) is skipped; an
+        undispatched *parity* query whose group has every original answered
+        is dropped.  Mirrors the DES's dequeue-time cancellation exactly.
+        """
+        with self.lock:
+            if tag == "query":
+                q = self.queries.get(payload)
+                if q is not None and q.event.is_set():
+                    self.cancelled_queries += 1
+                    return True
+                return False
+            # tag == "parity": payload is (gid, j)
+            info = self.groups.get(payload[0])
+            if info is not None and all(
+                    self.queries[m].event.is_set()
+                    for m in info["members"]):
+                self.cancelled_parities += 1
+                return True
+            return False
+
+    def _note_batch(self, n):
+        with self.lock:
+            self._n_batches += 1
+            self._n_batch_queries += n
 
     # ------------------------------------------------------------------
     def _on_model_done(self, tag, qid, out):
-        q = self.queries[qid]
+        """Single-item completion: the batch-atomic path with one pair."""
+        del tag
+        self._on_model_batch_done([(qid, out)])
+
+    def _on_model_batch_done(self, pairs):
+        """Batch-atomic completion for adaptive batching: record EVERY
+        batch-mate's output before any decode decision runs.  Delivering
+        the outputs one `_on_model_done` at a time would let the first
+        member's `_maybe_decode` treat a batch-mate as missing — and fulfill
+        it with an approximate parity reconstruction — even though its exact
+        output was computed in the very same inference call."""
         if not self.strategy.coded:
-            q.fulfill(out, "model")
+            for qid, out in pairs:
+                self.queries[qid].fulfill(out, "model")
             return
-        # record the output and fulfill atomically: a decode racing in
-        # between would see the member as available yet read its zero
-        # placeholder, reconstructing garbage for the group's straggler
         with self.lock:
-            gid = self.gid_of.get(qid)
-            info = self.groups.get(gid)
-            if info is not None:
-                info["outs"][qid] = out
-            else:
-                # finished before the k-th member arrived and the group was
-                # assembled; stash it so the decode never zero-fills this row
-                self._early_outs[qid] = out
-            q.fulfill(out, "model")
-            if info is not None:
+            touched = {}
+            for qid, out in pairs:
+                gid = self.gid_of.get(qid)
+                info = self.groups.get(gid)
+                if info is not None:
+                    info["outs"][qid] = out
+                    touched[gid] = info
+                else:
+                    self._early_outs[qid] = out
+            for qid, out in pairs:
+                self.queries[qid].fulfill(out, "model")
+            for gid, info in touched.items():
                 self._maybe_decode(gid, info)
 
     def _on_parity_done(self, tag, key, out):
@@ -338,10 +595,41 @@ class ParMFrontend:
         return all(q.event.is_set() for q in self.queries.values())
 
     def shutdown(self):
+        """Idempotent teardown: cancel armed SLO timers, wake every worker
+        with a shutdown sentinel (blocking ``get`` — no poll loop to time
+        out), flush the partial trailing coding group."""
+        with self.lock:
+            already = self._shutdown
+            self._shutdown = True
+            timers, self._timers = self._timers, set()
+        for t in timers:
+            t.cancel()
+        if not already:
+            for w in self.workers:
+                w.stop = True
+            for w in self.workers:
+                # one sentinel per worker on its own queue: a worker blocked
+                # in get() wakes instantly; a busy one exits after its item
+                w.pool_q.put(_SHUTDOWN)
         for w in self.workers:
-            w.stop = True
+            w.join(timeout=5.0)
+        # account abandoned queue backlog through the same tombstone rule a
+        # worker applies at dequeue: a redundant item left behind (its query
+        # already answered, or its parity group fully done) counts as
+        # cancelled — exactly what the DES reports, where every queued item
+        # is eventually popped.  Non-redundant leftovers stay uncounted.
+        seen = set()
         for w in self.workers:
-            w.join(timeout=1.0)
+            if id(w.pool_q) in seen:
+                continue
+            seen.add(id(w.pool_q))
+            while True:
+                try:
+                    item = w.pool_q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is not _SHUTDOWN:
+                    self._should_skip(item[0], item[1])
         # a workload that isn't a multiple of k leaves a partial coding group
         # behind; fulfill its members so wait_all() can't hang on them
         with self.lock:
@@ -352,29 +640,39 @@ class ParMFrontend:
             if q is not None and not q.event.is_set():
                 q.fulfill(self.default_prediction, "flushed")
 
-    def stats(self):
-        """Latency percentiles + completion-path counts, with the same keys
-        the DES (``repro.serving.simulator.simulate``) reports. Queries
-        flushed at shutdown appear in ``completed_by`` but are excluded from
-        the latency numbers — their finish time is a shutdown artifact."""
-        lats = np.array([q.latency_ms for q in self.queries.values()
+    def stats(self) -> ServingReport:
+        """Typed ``ServingReport`` (dict-compatible) with the same fields the
+        DES (``repro.serving.simulator.simulate``) reports. Queries flushed
+        at shutdown appear in ``completed_by`` but are excluded from the
+        latency numbers — their finish time is a shutdown artifact."""
+        with self.lock:
+            queries = list(self.queries.values())
+            cq, cp = self.cancelled_queries, self.cancelled_parities
+            nb, nbq = self._n_batches, self._n_batch_queries
+        lats = np.array([q.latency_ms for q in queries
                          if q.event.is_set() and q.completed_by != "flushed"])
         by = {}
-        for q in self.queries.values():
+        for q in queries:
             if q.completed_by:
                 by[q.completed_by] = by.get(q.completed_by, 0) + 1
 
         def pct(p):
             return float(np.percentile(lats, p)) if len(lats) else float("nan")
 
-        return {"strategy": self.strategy.name,
-                "scheme": self.scheme.name if self.strategy.coded else None,
-                "scenario": self.scenario.name if self.scenario else None,
-                "median_ms": pct(50),
-                "p99_ms": pct(99),
-                "p999_ms": pct(99.9),
-                "mean_ms": float(lats.mean()) if len(lats) else float("nan"),
-                "max_ms": float(lats.max()) if len(lats) else float("nan"),
-                "completed_by": by,
-                "reconstructions": by.get("parity", 0),
-                "n": int(len(lats))}
+        return ServingReport(
+            engine="threads",
+            strategy=self.strategy.name,
+            scheme=self.scheme.name if self.strategy.coded else None,
+            scenario=self.scenario.name if self.scenario else None,
+            n=int(len(lats)),
+            median_ms=pct(50),
+            p99_ms=pct(99),
+            p999_ms=pct(99.9),
+            mean_ms=float(lats.mean()) if len(lats) else float("nan"),
+            max_ms=float(lats.max()) if len(lats) else float("nan"),
+            completed_by=by,
+            reconstructions=by.get("parity", 0),
+            cancelled_queries=cq,
+            cancelled_parities=cp,
+            batches=nb,
+            mean_batch_size=(nbq / nb) if nb else 1.0)

@@ -23,6 +23,7 @@ Scenarios are registered like schemes and strategies::
     register_scenario(Scenario("flaky", (InstanceCrash(), NetworkShuffles())))
     simulate(cfg, "parm", scenario="flaky")
     ParMFrontend(..., scenario="flaky")
+    DeploymentSpec(..., scenario="flaky")      # either engine, via deploy()
 
 Built-ins: ``calm``, ``shuffle``, ``crash``, ``correlated_slowdown``,
 ``bursty``, ``hetero``, ``storm`` (everything at once).

@@ -36,17 +36,37 @@ scenario="crash")`` realizes the scenario's hazards — instance crash/restart,
 correlated pool slowdowns, bursty MMPP arrivals, heterogeneous service rates
 — into per-server slowdown windows.  With ``scenario=None`` the legacy
 cfg-driven shuffle process runs unchanged.
+
+This module is the **sim engine** behind the declarative serving surface in
+``repro.serving.api``: ``deploy(spec, engine="sim").replay(trace)`` builds a
+``SimConfig`` from (spec, trace) and calls ``simulate``.  Two serving-policy
+behaviors mirror the threaded runtime exactly:
+
+* **adaptive batching** (``cfg.batch_max_size > 1``): the main pool dequeues
+  up to that many waiting queries per free server and charges one service
+  interval on the calibrated per-batch curve
+  ``service * (1 + batch_cost * (b - 1))`` with the *actual* batch size b —
+  so tail-latency studies can sweep ``BatchingPolicy`` settings.  (The
+  legacy ``cfg.batch_size`` static multiplier is unchanged for old studies.)
+* **redundant-work cancellation**: queued originals whose query already
+  completed (a parity decode beat them, a mirror replica won, the SLO
+  default fired) and queued parity queries whose whole group already
+  finished are tombstoned — skipped at dequeue without occupying a server —
+  and counted in ``ServingReport.cancelled_queries`` /
+  ``cancelled_parities``, matching the runtime's dequeue-time semantics.
 """
 from __future__ import annotations
 
 import heapq
 import math
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.scheme import (decode_cost, encode_cost, get_scheme,
                                recoverable_rows)
+from repro.serving.report import ServingReport
 from repro.serving.scenarios import get_scenario
 from repro.serving.strategy import get_strategy
 
@@ -73,11 +93,21 @@ class SimConfig:
     decode_ms: float = 0.014        # one r=1 subtraction decode; multi-row
                                     # decodes pay scheme.decode_cost() times it
     approx_speedup: float = 1.15    # §5.2.6, GPU cluster value
-    slo_ms: float = 200.0           # default-prediction deadline (default_slo)
-    batch_size: int = 1             # §5.2.3; batched service is sublinear
+    slo_ms: float = 200.0           # default-prediction deadline
+                                    # (default_slo); None disables the
+                                    # deadline, matching a threads-engine
+                                    # deployment with no slo_ms set
+    batch_size: int = 1             # §5.2.3 legacy static model: every
+                                    # service interval is charged for a fixed
+                                    # batch of this size
     batch_cost: float = 0.2         # service(b) = service * (1 + cost*(b-1));
                                     # GPUs batch well (paper scaled qps by the
                                     # observed throughput gain)
+    batch_max_size: int = 1         # adaptive batching (BatchingPolicy
+                                    # .max_size): main pool dequeues up to
+                                    # this many queries per free server and
+                                    # charges the per-batch curve at the
+                                    # ACTUAL batch size
     seed: int = 0
 
 
@@ -90,26 +120,37 @@ class _Event:
 
 
 class _Pool:
-    """Single-queue pool of n servers with per-server slowdown windows."""
+    """Single-queue pool of n servers with per-server slowdown windows.
 
-    def __init__(self, name, n, rng, cfg, mean_ms):
+    ``batch_max`` — adaptive batching: a free server takes up to this many
+    queued items per dispatch (1 = no batching).  ``skip`` — redundant-work
+    tombstone check applied at dequeue; skipped items never occupy a server.
+    """
+
+    def __init__(self, name, n, rng, cfg, mean_ms, batch_max=1, skip=None):
         self.name = name
         self.n = n
         self.free = list(range(n))
-        self.queue = []
+        self.queue = deque()
         self.rng = rng
         self.cfg = cfg
         self.mean = mean_ms
+        self.batch_max = batch_max
+        self.skip = skip
+        self.n_calls = 0                # inference calls (batches) served
+        self.n_items = 0                # queries those calls carried
         self.slow_until = np.zeros(n)
         self.plan = None                # FaultPlan from a Scenario, if any
         self.sigma = math.sqrt(math.log(1 + cfg.service_cv ** 2))
         self.mu = math.log(mean_ms) - self.sigma ** 2 / 2
 
-    def service_time(self, server, now):
+    def service_time(self, server, now, b=1):
         base = self.rng.lognormal(self.mu, self.sigma)
-        b = self.cfg.batch_size
-        if b > 1:
-            base *= 1.0 + self.cfg.batch_cost * (b - 1)
+        # batching curve: adaptive batching charges the ACTUAL batch size;
+        # the legacy static model charges cfg.batch_size for every interval
+        eff_b = b if self.batch_max > 1 else self.cfg.batch_size
+        if eff_b > 1:
+            base *= 1.0 + self.cfg.batch_cost * (eff_b - 1)
         if now < self.slow_until[server]:
             base = base * self.cfg.shuffle_slowdown + \
                 self.rng.uniform(*self.cfg.shuffle_delay_ms)
@@ -122,22 +163,37 @@ class _Pool:
         self.queue.append(item)
 
     def try_dispatch(self, now):
-        """Returns list of (server, item, finish_time)."""
+        """Returns list of (server, items, finish_time); ``items`` is the
+        batch one server serves in one inference call."""
         out = []
         while self.free and self.queue:
+            batch = []
+            while self.queue and len(batch) < self.batch_max:
+                item = self.queue.popleft()
+                if self.skip is not None and self.skip(item):
+                    continue            # tombstoned while queued
+                batch.append(item)
+            if not batch:
+                break                   # queue drained by tombstones
             s = self.free.pop()
-            item = self.queue.pop(0)
-            out.append((s, item, now + self.service_time(s, now)))
+            self.n_calls += 1
+            self.n_items += len(batch)
+            out.append((s, batch,
+                        now + self.service_time(s, now, len(batch))))
         return out
 
 
-def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
+def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
+             backend=None):
     """Run the DES under a ``ResilienceStrategy`` (instance or registered
     name).  ``scheme`` (instance or name) overrides the strategy's default
     code for coded strategies; ``scenario`` (instance or name) overrides the
     built-in shuffle background load with a hazard set from
-    ``repro.serving.scenarios``.  Returns dict with latency percentiles and
-    bookkeeping."""
+    ``repro.serving.scenarios``.  ``backend`` is validated through the same
+    ``get_scheme`` resolution the threads engine applies — the DES runs no
+    kernel math, but an identical spec must pass or fail identically on both
+    engines.  Returns a ``ServingReport`` (typed, dict-compatible) with
+    latency percentiles and bookkeeping."""
     strat = get_strategy(strategy)
     rng = np.random.default_rng(cfg.seed)
     k = cfg.k                               # redundancy budget (pool sizing)
@@ -146,24 +202,64 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
     r = cfg.r
     enc_ms = cfg.encode_ms
     parity_service_ms = cfg.service_ms
+    # resolve the scheme UNCONDITIONALLY, exactly like ParMFrontend._build:
+    # an invalid scheme/backend must fail identically on both engines even
+    # under a non-coded strategy (which then simply never uses the code)
+    want = scheme if scheme is not None else (strat.scheme or "sum")
+    # cfg.r sizes registry-name schemes; an instance carries its own r
+    # (mirrors ParMFrontend, which defaults r to the instance's value)
+    resolved = get_scheme(want, k=k,
+                          r=cfg.r if isinstance(want, str) else None,
+                          backend=backend)
     if strat.coded:
-        want = scheme if scheme is not None else (strat.scheme or "sum")
-        # cfg.r sizes registry-name schemes; an instance carries its own r
-        # (mirrors ParMFrontend, which defaults r to the instance's value)
-        schm = get_scheme(want, k=k,
-                          r=cfg.r if isinstance(want, str) else None)
+        schm = resolved
         r = schm.r                          # a scheme may fix its own r
         gk = schm.k                         # ... and its own group size
         enc_ms = cfg.encode_ms * encode_cost(schm)
         if getattr(schm, "approximate", False):
             # approx_backup scheme: the parity pool runs cheap backup models
             parity_service_ms = cfg.service_ms / cfg.approx_speedup
+
+    n = cfg.n_queries
+    latency = np.full(n, np.inf)
+    done = np.zeros(n, bool)
+    how = np.zeros(n, np.int8)              # 0 model | 1 parity | 2 default
+    cancelled = {"q": 0, "p": 0}
+
+    # coding-group bookkeeping (coded strategies only); member availability
+    # is read off ``done`` — a reconstructed member counts as available for
+    # the next decode decision, exactly as in the runtime's _maybe_decode
+    group_of = np.arange(n) // gk
+    n_groups = (n + gk - 1) // gk
+    group_parity_t = np.full((n_groups, max(r, 1)), np.inf)  # parity ready
+
+    def tombstoned(item):
+        """Dequeue-time redundant-work cancellation — the DES mirror of the
+        runtime's ``ParMFrontend._should_skip``: an original whose query
+        already completed, or a parity query whose whole group did, is
+        skipped without occupying a server."""
+        kind, idx = item
+        if kind == "q":
+            if done[idx]:
+                cancelled["q"] += 1
+                return True
+            return False
+        g = idx[0]
+        base = g * gk
+        if done[base:base + gk].all():
+            cancelled["p"] += 1
+            return True
+        return False
+
     layout = strat.layout(cfg.m, k, r)
-    pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms)}
+    pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms,
+                           batch_max=max(1, cfg.batch_max_size),
+                           skip=tombstoned)}
     if layout.parity:
         for j in range(r):
             pools[f"parity{j}"] = _Pool(f"parity{j}", layout.parity, rng,
-                                        cfg, parity_service_ms)
+                                        cfg, parity_service_ms,
+                                        skip=tombstoned)
 
     # pre-draw arrivals (a scenario may replace Poisson with MMPP bursts)
     scen = None
@@ -174,17 +270,8 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
         scen = get_scenario(scenario)
         arrivals = scen.arrival_times(cfg, rng)
     if arrivals is None:
-        arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, cfg.n_queries))
-    latency = np.full(cfg.n_queries, np.inf)
+        arrivals = np.cumsum(rng.exponential(1000.0 / cfg.qps, n))
     arrival_t = arrivals.copy()
-    done = np.zeros(cfg.n_queries, bool)
-
-    # coding-group bookkeeping (coded strategies only); member availability
-    # is read off ``done`` — a reconstructed member counts as available for
-    # the next decode decision, exactly as in the runtime's _maybe_decode
-    group_of = np.arange(cfg.n_queries) // gk
-    n_groups = (cfg.n_queries + gk - 1) // gk
-    group_parity_t = np.full((n_groups, max(r, 1)), np.inf)  # parity ready
 
     events = []
     seq = 0
@@ -226,15 +313,14 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
 
     def dispatch(pool_name, now):
         pool = pools[pool_name]
-        for s, item, fin in pool.try_dispatch(now):
-            push(fin, "finish", (pool_name, s, item))
+        for s, items, fin in pool.try_dispatch(now):
+            push(fin, "finish", (pool_name, s, items))
 
-    def complete(qi, t, reconstructed=False):
+    def complete(qi, t, by=0):
         if not done[qi]:
             done[qi] = True
             latency[qi] = t - arrival_t[qi]
-            if reconstructed:
-                nonlocal_counter[0] += 1
+            how[qi] = by
 
     def maybe_reconstruct(g, t):
         """Reconstruct every member the scheme can recover *right now*: the
@@ -242,7 +328,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
         parities arrived) — the exact decision ``ParMFrontend._maybe_decode``
         takes, so the two layers agree on recoverability by construction."""
         base = g * gk
-        if base + gk > cfg.n_queries:
+        if base + gk > n:
             return          # partial trailing group: the runtime never
                             # encodes one, so the DES doesn't decode one
         miss = ~done[base:base + gk]
@@ -257,9 +343,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
         ready = t + cfg.decode_ms * decode_cost(schm, int(rows.sum()))
         for j in np.nonzero(rows)[0]:
             qi = base + int(j)
-            complete(qi, max(ready, arrival_t[qi]), reconstructed=True)
-
-    nonlocal_counter = [0]
+            complete(qi, max(ready, arrival_t[qi]), by=1)
 
     while events:
         ev = heapq.heappop(events)
@@ -278,39 +362,58 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None):
                 for j in range(r):
                     pools[f"parity{j}"].submit(("p", (g, j)))
                     dispatch(f"parity{j}", t + enc_ms)
-            if strat.slo_default:
+            if strat.slo_default and cfg.slo_ms is not None:
                 push(t + cfg.slo_ms, "slo", qi)
         elif ev.kind == "finish":
-            pool_name, s, item = ev.payload
+            pool_name, s, items = ev.payload
             pools[pool_name].free.append(s)
-            kind, idx = item
-            if kind == "q":
-                complete(idx, t)
-                if strat.coded:
-                    maybe_reconstruct(group_of[idx], t)
-            else:  # parity output (g, j)
-                g, j = idx
-                group_parity_t[g, j] = min(group_parity_t[g, j], t)
+            # complete EVERY item of the batch before any reconstruction
+            # decision — mirroring the runtime's batch-atomic completion: a
+            # decode must never treat a batch-mate as missing when its exact
+            # output arrived in the same inference call
+            touched = []
+            for kind, idx in items:
+                if kind == "q":
+                    complete(idx, t)
+                    if strat.coded:
+                        touched.append(int(group_of[idx]))
+                else:  # parity output (g, j)
+                    g, j = idx
+                    group_parity_t[g, j] = min(group_parity_t[g, j], t)
+                    touched.append(int(g))
+            for g in dict.fromkeys(touched):
                 maybe_reconstruct(g, t)
             dispatch(pool_name, t)
         elif ev.kind == "slo":
             # Clipper baseline: answer with the default prediction at the
             # SLO deadline if the real prediction hasn't arrived
-            complete(ev.payload, t)
+            complete(ev.payload, t, by=2)
         elif ev.kind == "shuffle":
             schedule_shuffle(t)
 
     lat = latency[np.isfinite(latency)]
-    assert len(lat) == cfg.n_queries, \
-        f"unanswered queries: {cfg.n_queries - len(lat)}"
-    return {
-        "strategy": strat.name,
-        "scheme": schm.name if schm is not None else None,
-        "scenario": scen.name if scen is not None else None,
-        "median_ms": float(np.percentile(lat, 50)),
-        "p99_ms": float(np.percentile(lat, 99)),
-        "p999_ms": float(np.percentile(lat, 99.9)),
-        "mean_ms": float(lat.mean()),
-        "max_ms": float(lat.max()),
-        "reconstructions": int(nonlocal_counter[0]),
-    }
+    assert len(lat) == n, f"unanswered queries: {n - len(lat)}"
+    by = {}
+    for code, name in ((0, "model"), (1, "parity"), (2, "default")):
+        c = int((how == code).sum())
+        if c:
+            by[name] = c
+    main = pools["main"]
+    return ServingReport(
+        engine="sim",
+        strategy=strat.name,
+        scheme=schm.name if schm is not None else None,
+        scenario=scen.name if scen is not None else None,
+        n=n,
+        median_ms=float(np.percentile(lat, 50)),
+        p99_ms=float(np.percentile(lat, 99)),
+        p999_ms=float(np.percentile(lat, 99.9)),
+        mean_ms=float(lat.mean()),
+        max_ms=float(lat.max()),
+        completed_by=by,
+        reconstructions=int((how == 1).sum()),
+        cancelled_queries=cancelled["q"],
+        cancelled_parities=cancelled["p"],
+        batches=main.n_calls,
+        mean_batch_size=(main.n_items / main.n_calls) if main.n_calls
+        else 1.0)

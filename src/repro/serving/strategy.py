@@ -32,12 +32,20 @@ instance budget, §5.1):
   ``none``            m deployed only (queueing-knee baseline).
 
 New strategies plug in with ``register_strategy`` from any file and are then
-runnable end-to-end through ``ParMFrontend`` and ``simulate`` untouched.
+runnable end-to-end through ``ParMFrontend`` and ``simulate`` untouched —
+and, one level up, through the declarative serving surface: a
+``DeploymentSpec(strategy="mine")`` deploys on either engine
+(``repro.serving.api.deploy``) the moment the name is registered.
 
 A strategy may also pin a default fault ``scenario`` (a registered name from
 ``repro.serving.scenarios``); both serving layers resolve it when the caller
 does not pass one explicitly, so a strategy can declare the hazard regime it
 is meant to be evaluated under.
+
+Serving *policy* — adaptive batching, SLO deadlines, redundant-work
+cancellation — deliberately does NOT live here: those are frontend
+properties declared on the ``DeploymentSpec`` (``BatchingPolicy``,
+``slo_ms``), orthogonal to the resilience strategy (DESIGN.md §8).
 """
 from __future__ import annotations
 

@@ -55,4 +55,16 @@ def test_checked_in_baseline_matches_smoke_metric_set():
     for strat in ("parm", "equal_resources", "replication", "none"):
         assert f"smoke_{strat}_p999_ms" in metrics, strat
     assert "smoke_r2_correlated_p999_ms" in metrics
+    for b in (1, 2, 4):
+        assert f"smoke_batch{b}_p999_ms" in metrics, b
     assert all(isinstance(v, (int, float)) for v in metrics.values())
+
+
+def test_baseline_shows_adaptive_batching_improves_overloaded_tail():
+    """The batching sweep exists to document that max_size > 1 stabilizes
+    the overloaded deployment: the checked-in baseline itself must show the
+    batched smoke runs beating the unbatched one by a wide margin."""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        metrics = json.load(f)["metrics"]
+    assert metrics["smoke_batch4_p999_ms"] < metrics["smoke_batch1_p999_ms"] / 2
+    assert metrics["smoke_batch2_p999_ms"] < metrics["smoke_batch1_p999_ms"] / 2

@@ -1,24 +1,27 @@
 """Differential battery: the anti-drift contract of DESIGN.md §1.
 
-Both serving layers — the threaded ``ParMFrontend`` and the DES
-``simulate`` — consume the same ``ResilienceStrategy`` / ``CodingScheme`` /
-``Scenario`` objects.  These tests drive the SAME unavailability pattern
-through both layers for every registered strategy (and for coded strategies,
-every relevant scheme including the r=2 Vandermonde code and replication)
-and assert they make the same recoverability decision and perform the same
-number of reconstructions.
+Both serving layers — the threaded runtime and the DES — consume the same
+``ResilienceStrategy`` / ``CodingScheme`` / ``Scenario`` objects, and since
+the ``DeploymentSpec`` redesign they consume them through the SAME
+declarative spec: every test here builds ONE ``DeploymentSpec`` and drives it
+through ``deploy(spec, engine="threads")`` and ``deploy(spec, engine="sim")``
+for every registered strategy (and, for coded strategies, every relevant
+scheme including the r=2 Vandermonde code and replication), asserting the
+two engines make the same recoverability decision, perform the same number
+of reconstructions, AND cancel the same redundant work (tombstoned
+originals / dropped parity queries).
 
-The pattern is expressed once as a ``Scenario`` of ``DeterministicSlowdown``
-hazards on (pool, server) coordinates; the DES applies it as service-time
-windows and the runtime applies it through the fault-injecting ``delay_fn``
-adapter — so the test also proves the adapter maps instance ids onto the
-same coordinates the simulator uses.
+The unavailability pattern is expressed once as a ``Scenario`` of
+``DeterministicSlowdown`` hazards on (pool, server) coordinates; the DES
+applies it as service-time windows and the runtime applies it through the
+fault-injecting ``delay_fn`` adapter — so the battery also proves the
+adapter maps instance ids onto the same coordinates the simulator uses.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.runtime import ParMFrontend
+from repro.serving.api import BatchingPolicy, DeploymentSpec, Trace, deploy
 from repro.serving.scenarios import DeterministicSlowdown, Scenario
 from repro.serving.simulator import SimConfig, simulate
 from repro.serving.strategy import available_strategies, get_strategy
@@ -29,10 +32,17 @@ from repro.serving.strategy import available_strategies, get_strategy
 # other main server gets BASE_MS: with k queries submitted back-to-back and
 # every worker busy for >= BASE_MS, each of the runtime's k main workers
 # deterministically serves exactly one group member — the same one-member-
-# per-server assignment the DES's free-list dispatch produces.
+# per-server assignment the DES's free-list dispatch produces.  Every LIVE
+# parity/backup pool gets PARITY_BASE_MS: a decode can then never land
+# before an idle main worker has provably dequeued its query (the runtime's
+# dequeue is near-instant but not instant — without this floor a ~ms-fast
+# backup reconstruction occasionally tombstones a main-queue item the DES
+# considers already in service), while still finishing far below BASE_MS
+# so every in-time decode stays in time.
 MEMBER_MS = 700.0
 PARITY_MS = 1800.0
-BASE_MS = 150.0
+BASE_MS = 300.0
+PARITY_BASE_MS = 100.0
 
 
 def _pattern_scenario(k, slow_main, slow_parity_pools):
@@ -40,49 +50,79 @@ def _pattern_scenario(k, slow_main, slow_parity_pools):
     slow = tuple(("main", s) for s in slow_main)
     base = tuple(("main", s) for s in range(k) if s not in slow_main)
     lost = tuple((f"parity{j}", 0) for j in slow_parity_pools)
+    # slow every live parity pool the battery can spawn (r <= 4 here);
+    # hazards on pools that don't exist are never consulted
+    live = tuple((f"parity{j}", 0) for j in range(4)
+                 if j not in slow_parity_pools)
     if slow:
         hazards.append(DeterministicSlowdown(targets=slow, add_ms=MEMBER_MS))
     if base:
         hazards.append(DeterministicSlowdown(targets=base, add_ms=BASE_MS))
     if lost:
         hazards.append(DeterministicSlowdown(targets=lost, add_ms=PARITY_MS))
+    if live:
+        hazards.append(DeterministicSlowdown(targets=live,
+                                             add_ms=PARITY_BASE_MS))
     return Scenario("diff-pattern", tuple(hazards))
 
 
-def _run_runtime(scheme, k, r, scenario, n=None):
-    """One coding group (k queries) through the threaded frontend with
-    m = k main instances (one per member) and 1 instance per parity pool."""
+def _linear_fwd(p, x):
+    return x @ p
+
+
+def _make_spec(scheme, k, r, scenario, *, m=None, strategy="parm"):
+    """ONE DeploymentSpec consumed verbatim by BOTH engines.  The deployed
+    model is linear, so W itself is an exact parity model for ANY linear
+    combination — every Vandermonde row is served exactly."""
     rng = np.random.default_rng(0)
     W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
-
-    def fwd(p, x):
-        return x @ p
-
-    # linear deployed model: W itself is an exact parity model for ANY
-    # linear combination, so every Vandermonde row is served exactly
     parity_params = None if scheme == "replication" else \
         [W] * (r if r else 1)
-    fe = ParMFrontend(fwd, W, parity_params=parity_params, k=k, r=r, m=k,
-                      strategy="parm", scheme=scheme, scenario=scenario)
+    spec = DeploymentSpec(fwd=_linear_fwd, params=W,
+                          parity_params=parity_params, strategy=strategy,
+                          scheme=scheme, k=k, r=r,
+                          m=k if m is None else m, scenario=scenario)
+    return spec, W
+
+
+def _run_runtime(spec, W, n, gap_s=0.0):
+    """``n`` queries through the threads engine; checks every answer is the
+    exact linear prediction, then returns the post-shutdown report (shutdown
+    also settles the redundant-work accounting for abandoned backlog).
+    ``gap_s`` spaces submissions so an idle worker provably dequeues each
+    query before the next exists (mirrors the DES, where a free server takes
+    an arrival immediately)."""
+    import time as _time
+    rng = np.random.default_rng(0)
+    sess = deploy(spec, engine="threads")
     try:
-        xs = [rng.normal(size=(1, 8)).astype(np.float32)
-              for _ in range(n or k)]
-        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
-        assert fe.wait_all(timeout=30)
-        for q, x in zip(qs, xs):
-            np.testing.assert_allclose(q.result, np.asarray(fwd(W, x)),
+        fe = sess.frontend
+        if fe.strategy.coded:
+            # warm the encode JIT before timing matters: the DES charges a
+            # fixed sub-ms encode cost, so a first-call compile pause here
+            # would skew the wall-clock pattern the battery relies on
+            fe.encode_fn(np.zeros((fe.group_k, 1, 8), np.float32))
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(n)]
+        futs = []
+        for x in xs:
+            futs.append(sess.submit(x))
+            if gap_s:
+                _time.sleep(gap_s)
+        assert sess.wait_all(timeout=30)
+        for f, x in zip(futs, xs):
+            np.testing.assert_allclose(f.result(timeout=1.0),
+                                       np.asarray(_linear_fwd(W, x)),
                                        atol=1e-2)
-        return fe.stats()
     finally:
-        fe.shutdown()
+        sess.shutdown()
+    return sess.stats()
 
 
-def _run_sim(scheme, k, r, scenario, n=None):
-    """The same single coding group through the DES: m = k main servers, so
-    each member lands on its own server, exactly like the runtime above."""
-    cfg = SimConfig(n_queries=n or k, qps=1000.0, m=k, k=k,
-                    r=r if r else 1, seed=0, n_shuffles=0)
-    return simulate(cfg, "parm", scheme=scheme, scenario=scenario)
+def _run_sim(spec, n):
+    """The same spec through the sim engine: m = k main servers means each
+    member lands on its own server, exactly like the runtime above."""
+    return deploy(spec, engine="sim").replay(
+        Trace(n_queries=n, qps=1000.0, seed=0, n_shuffles=0))
 
 
 # (scheme, k, r, slow main servers, slow parity pools,
@@ -122,7 +162,9 @@ CODED_CASES = [
     # time, both layers answer every query from the backup pool ("parity")
     ("approx_backup", 2, None, (0,), (), 2, True),
     # ... and with the backup pool itself lost, nothing reconstructs — the
-    # stragglers show in both layers' tails identically
+    # stragglers show in both layers' tails identically, and the second
+    # backup query (still queued when its group finishes on the mains) is
+    # tombstoned as redundant work by BOTH layers
     ("approx_backup", 2, None, (0,), (0,), 0, False),
 ]
 
@@ -134,12 +176,17 @@ CODED_CASES = [
 def test_runtime_and_simulator_agree_on_recoverability(
         scheme, k, r, slow_main, slow_par, expected, in_time):
     scen = _pattern_scenario(k, slow_main, slow_par)
-    sim = _run_sim(scheme, k, r, scen)
-    rt = _run_runtime(scheme, k, r, scen)
+    spec, W = _make_spec(scheme, k, r, scen)
+    sim = _run_sim(spec, n=k)
+    rt = _run_runtime(spec, W, n=k)
     # identical reconstruction counts and identical recoverability decision
     assert sim["reconstructions"] == expected, sim
     assert rt["reconstructions"] == expected, rt
     assert (sim["reconstructions"] > 0) == (rt["reconstructions"] > 0)
+    # identical redundant-work accounting: tombstoned originals and dropped
+    # parity queries match across the two engines, case by case
+    assert sim["cancelled_queries"] == rt["cancelled_queries"], (sim, rt)
+    assert sim["cancelled_parities"] == rt["cancelled_parities"], (sim, rt)
     if in_time:
         # every straggler was decoded before it returned, in both layers
         assert sim["p999_ms"] < MEMBER_MS, sim
@@ -155,6 +202,145 @@ def _completions(stats):
     return [k for k, v in stats["completed_by"].items() for _ in range(v)]
 
 
+# ---------------------------------------------------- cancellation battery --
+# (label, strategy, scheme, k, r, m, n, scenario,
+#  expected cancelled_queries, expected cancelled_parities, expected recon)
+CANCELLATION_CASES = [
+    # ONE main server stuck with q0 while q1 waits behind it; both replicas
+    # arrive fast and reconstruct both queries, so the queued original q1 is
+    # tombstoned at dequeue in both engines (q0 was already in service —
+    # in-flight work is never cancelled, only queued work)
+    ("queued-original-tombstoned", "parm", "replication", 2, None, 1, 2,
+     Scenario("diff-cancel-a",
+              (DeterministicSlowdown(targets=(("main", 0),),
+                                     add_ms=MEMBER_MS),
+               # replica pools idle a beat first, so the main worker has
+               # provably dequeued q0 before the decode fulfills it
+               DeterministicSlowdown(targets=(("parity0", 0),
+                                              ("parity1", 0)),
+                                     add_ms=PARITY_BASE_MS))),
+     1, 0, 2),
+    # the single parity server is stuck serving group 0's parity while
+    # group 1's parity waits behind it; the mains (pinned busy for BASE_MS
+    # so group 0 is demonstrably unavailable when its parity is dequeued)
+    # answer every original, so the undispatched parity query is dropped by
+    # both engines — and ONLY that one: group 0's parity was already in
+    # service, and in-flight work is never cancelled
+    ("undispatched-parity-dropped", "parm", "sum", 2, 1, 2, 4,
+     Scenario("diff-cancel-b",
+              (DeterministicSlowdown(targets=(("parity0", 0),),
+                                     add_ms=PARITY_MS),
+               DeterministicSlowdown(targets=(("main", 0), ("main", 1)),
+                                     add_ms=BASE_MS))),
+     0, 1, 0),
+    # mirror replication (non-coded): the second copy of an already-answered
+    # query is redundant work — skipped at dequeue by both engines
+    ("mirror-copy-tombstoned", "replication", None, 2, None, 1, 1,
+     Scenario("diff-cancel-c", ()),
+     1, 0, 0),
+]
+
+
+@pytest.mark.parametrize(
+    "label,strategy,scheme,k,r,m,n,scen,exp_cq,exp_cp,exp_recon",
+    CANCELLATION_CASES, ids=[c[0] for c in CANCELLATION_CASES])
+def test_redundant_work_cancellation_matches_across_engines(
+        label, strategy, scheme, k, r, m, n, scen, exp_cq, exp_cp,
+        exp_recon):
+    spec, W = _make_spec(scheme, k, r, scen, m=m, strategy=strategy)
+    sim = _run_sim(spec, n=n)
+    rt = _run_runtime(spec, W, n=n)
+    for rep in (sim, rt):
+        assert rep["cancelled_queries"] == exp_cq, (label, rep)
+        assert rep["cancelled_parities"] == exp_cp, (label, rep)
+        assert rep["reconstructions"] == exp_recon, (label, rep)
+    assert sim["completed_by"].keys() == rt["completed_by"].keys()
+
+
+def test_batching_policy_flows_through_both_engines():
+    """A spec with adaptive batching enabled must serve the same
+    deterministic pattern with the same reconstruction/cancellation counts:
+    with one member per idle server no batch ever exceeds 1, so batching
+    must not perturb the recoverability decision in either engine.
+    (``max_delay_ms`` stays 0 — the DES models the size cap only; the
+    runtime spaces submissions so each idle worker provably takes one
+    member, the assignment the DES's free-list dispatch produces.)"""
+    scen = _pattern_scenario(2, (0,), ())
+    spec, W = _make_spec("sum", 2, 1, scen)
+    spec = spec.replace(batching=BatchingPolicy(max_size=4))
+    sim = _run_sim(spec, n=2)
+    rt = _run_runtime(spec, W, n=2, gap_s=0.05)
+    assert sim["reconstructions"] == rt["reconstructions"] == 1
+    assert sim["cancelled_queries"] == rt["cancelled_queries"] == 0
+    assert sim["mean_batch_size"] == rt["mean_batch_size"] == 1.0
+
+
+def test_batched_group_mates_complete_as_model_in_both_engines():
+    """Batch-atomic completion: when BOTH members of a coding group are
+    served in ONE batched inference call (they queued behind a slowed
+    single server while their parity arrived long before), neither engine
+    may 'reconstruct' one of them — the exact outputs land together.
+    Pattern: m=1, k=2, n=4.  q0 is slowed 600 ms; q1 is decoded from parity
+    the moment q0's output arrives (1 reconstruction) and its queued
+    original is tombstoned (1 cancellation); q2+q3 — one whole group — are
+    then served as a single batch and must BOTH complete as 'model', even
+    though their group's parity arrived while they waited."""
+    scen = Scenario("diff-batch-mates",
+                    (DeterministicSlowdown(targets=(("main", 0),),
+                                           add_ms=600.0, t0=0.0, t1=600.0),))
+    spec, W = _make_spec("sum", 2, 1, scen, m=1)
+    spec = spec.replace(batching=BatchingPolicy(max_size=2))
+    sim = _run_sim(spec, n=4)
+    # the gap lets the lone worker take q0 alone (as the DES's free server
+    # does) before q1..q3 queue up behind its 600 ms straggle
+    rt = _run_runtime(spec, W, n=4, gap_s=0.05)
+    for rep in (sim, rt):
+        assert rep["reconstructions"] == 1, rep
+        assert rep["cancelled_queries"] == 1, rep
+        assert rep["completed_by"] == {"model": 3, "parity": 1}, rep
+    assert sim["mean_batch_size"] > 1.0 and rt["mean_batch_size"] > 1.0
+
+
+def test_identical_spec_accepted_by_both_engines_for_every_registration():
+    """Acceptance: deploy(spec, "threads") and deploy(spec, "sim") take the
+    IDENTICAL DeploymentSpec for every registered strategy x scheme.  Image-
+    shaped queries keep the shape-specialized concat code servable; the
+    deployed model is linear over the flattened image."""
+    from repro.core.scheme import available_schemes
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+
+    def fwd(p, x):
+        return x.reshape(x.shape[0], -1) @ p
+
+    scen = Scenario("diff-sweep", ())
+    for strat_name in available_strategies():
+        coded = get_strategy(strat_name).coded
+        for scheme in (available_schemes() if coded else [None]):
+            spec = DeploymentSpec(
+                fwd=fwd, params=W, parity_params=None, strategy=strat_name,
+                scheme=scheme, k=2, m=2, scenario=scen, slo_ms=500.0,
+                default_prediction=np.zeros((1, 3), np.float32))
+            sim = deploy(spec, engine="sim").replay(
+                Trace(n_queries=50, qps=400.0, seed=0, n_shuffles=0))
+            assert sim["strategy"] == strat_name
+            assert sim["n"] == 50
+            sess = deploy(spec, engine="threads")
+            try:
+                futs = [sess.submit(
+                    rng.normal(size=(1, 4, 4, 1)).astype(np.float32))
+                    for _ in range(4)]
+                assert sess.wait_all(timeout=30), (strat_name, scheme)
+                assert all(f.done() for f in futs)
+            finally:
+                sess.shutdown()
+            rt = sess.stats()
+            assert rt["strategy"] == sim["strategy"] == strat_name
+            assert rt["scheme"] == sim["scheme"]
+            assert rt["scenario"] == sim["scenario"] == "diff-sweep"
+            assert rt["engine"] == "threads" and sim["engine"] == "sim"
+
+
 def test_noncoded_strategies_never_reconstruct():
     """Every registered non-coded strategy must agree across both layers:
     zero reconstructions, all queries answered, under the same slowdown."""
@@ -167,20 +353,22 @@ def test_noncoded_strategies_never_reconstruct():
         strat = get_strategy(name)
         if strat.coded:
             continue
-        sim = simulate(SimConfig(n_queries=4, qps=500.0, m=2, k=2, seed=0,
-                                 n_shuffles=0), name, scenario=scen)
+        spec = DeploymentSpec(fwd=_linear_fwd, params=W, strategy=name,
+                              k=2, m=2, scenario=scen)
+        sim = deploy(spec, engine="sim").replay(
+            Trace(n_queries=4, qps=500.0, seed=0, n_shuffles=0))
         assert sim["reconstructions"] == 0, name
-        fe = ParMFrontend(lambda p, x: x @ p, W, k=2, m=2, strategy=name,
-                          scenario=scen)
+        sess = deploy(spec, engine="threads")
         try:
-            qs = [fe.submit(i, np.ones((1, 4), np.float32))
-                  for i in range(4)]
-            assert fe.wait_all(timeout=15), name
-            st = fe.stats()
+            futs = [sess.submit(np.ones((1, 4), np.float32))
+                    for _ in range(4)]
+            assert sess.wait_all(timeout=15), name
+            st = sess.stats()
             assert st["reconstructions"] == 0, (name, st)
             assert st["n"] == 4, (name, st)
+            del futs
         finally:
-            fe.shutdown()
+            sess.shutdown()
 
 
 def test_simulator_resolves_schemes_through_registry():

@@ -295,3 +295,169 @@ def test_encode_decode_latency_budget():
         decode(q[0], outs).block_until_ready()
     dec_us = (time.perf_counter() - t0) / 50 * 1e6
     assert enc_us < 5000 and dec_us < 5000, (enc_us, dec_us)
+
+
+# ------------------------------------------- shutdown / flush / batching ----
+def test_shutdown_wakes_blocked_workers_without_polling():
+    """Workers block on the pool queue (no idle-wakeup poll loop); the
+    shutdown sentinel must wake and retire every one of them promptly."""
+    W = jnp.ones((4, 3), jnp.float32)
+    fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=2, m=12,
+                      strategy="parm")
+    assert all(w.is_alive() for w in fe.workers)
+    t0 = time.perf_counter()
+    fe.shutdown()
+    assert time.perf_counter() - t0 < 0.2       # sub-ms per idle worker
+    assert all(not w.is_alive() for w in fe.workers)
+    fe.shutdown()                               # idempotent
+
+
+def test_shutdown_cancels_armed_slo_timers():
+    """default_slo arms one Timer per query; shutdown() must cancel them so
+    none fires into the torn-down frontend (and flushed queries must stay
+    'flushed', not be overwritten by a late 'default')."""
+    W = jnp.ones((4, 3), jnp.float32)
+    default = np.zeros((1, 3), np.float32)
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=1, strategy="default_slo",
+                      delay_fn=lambda i: 0.5, default_prediction=default,
+                      slo_ms=150.0)
+    qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(3)]
+    assert len(fe._timers) == 3
+    fe.shutdown()                    # well before the 150 ms deadline
+    assert not fe._timers            # armed timers cancelled and dropped
+    time.sleep(0.25)                 # past the deadline: nothing may fire
+    assert all(q.completed_by != "default" for q in qs if q.event.is_set())
+
+
+def test_slo_timer_set_does_not_accumulate_fired_timers():
+    """A fired timer removes itself from the armed set — a long-lived
+    deployment must not leak one Timer object per served query."""
+    W = jnp.ones((4, 3), jnp.float32)
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=2, strategy="default_slo",
+                      default_prediction=np.zeros((1, 3), np.float32),
+                      slo_ms=30.0)
+    try:
+        qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(8)]
+        assert fe.wait_all(timeout=10)
+        deadline = time.time() + 5
+        while fe._timers and time.time() < deadline:
+            time.sleep(0.01)
+        assert not fe._timers, len(fe._timers)
+        del qs
+    finally:
+        fe.shutdown()
+
+
+def test_wait_all_true_after_non_multiple_of_k_workload():
+    """A workload that isn't a multiple of k: the full group completes (its
+    straggler via parity decode, tombstoning the now-redundant original),
+    the trailing partial-group query — stuck behind the lone busy worker —
+    keeps wait_all() False until shutdown flushes it, after which wait_all()
+    must return True with every query settled."""
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=2, m=1,
+                      strategy="parm", delay_fn=lambda i: 0.4 if i == 0
+                      else 0.0)
+    qs = [fe.submit(i, rng.normal(size=(1, 8)).astype(np.float32))
+          for i in range(3)]
+    assert fe.wait_all(timeout=0.15) is False   # worker still holds q0
+    # shutdown while q1/q2 are still queued: the worker finishes q0 (whose
+    # output unlocks q1's decode), then retires without touching the backlog
+    fe.shutdown()
+    assert fe.wait_all(timeout=5) is True
+    assert qs[0].completed_by == "model"        # served by the slow worker
+    assert qs[1].completed_by == "parity"       # decoded around it
+    assert all(q.event.is_set() for q in qs)
+    assert qs[2].completed_by == "flushed"
+    st = fe.stats()
+    assert st["n"] == 2                          # flushed excluded from stats
+    assert st["completed_by"]["flushed"] == 1
+    # q1's original was dequeued (or drained at shutdown) after its parity
+    # reconstruction arrived: redundant work, cancelled
+    assert st["cancelled_queries"] == 1
+
+
+def test_early_output_stash_is_consumed_at_group_assembly():
+    """An output that beats its group's assembly parks in _early_outs and
+    must be moved into the group (and removed from the stash) the moment the
+    group forms, so the decode reads the real output, not a zero row."""
+    rng = np.random.default_rng(3)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    fe = ParMFrontend(_linear_fwd, W, parity_params=W, k=2, m=2,
+                      strategy="parm",
+                      delay_fn=lambda i: 0.5 if i < 2 else 0.0)
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        q0 = fe.submit(0, xs[0])
+        assert q0.event.wait(10)            # done before the group exists
+        with fe.lock:
+            assert 0 in fe._early_outs      # parked: group not assembled yet
+        q1 = fe.submit(1, xs[1])            # group forms now; q1 straggles
+        with fe.lock:
+            assert not fe._early_outs       # stash consumed by assembly
+            assert 0 in fe.groups[0]["outs"]
+        assert fe.wait_all(timeout=30)
+        assert q1.completed_by == "parity"
+        np.testing.assert_allclose(
+            q1.result, np.asarray(_linear_fwd(W, xs[1])), atol=1e-3)
+    finally:
+        fe.shutdown()
+
+
+def test_threaded_adaptive_batching_batches_backlog_and_splits_results():
+    """With one worker held busy, a burst of queries queues behind it; the
+    worker must then serve them in one stacked inference call (up to
+    max_size) and split the outputs back per query, bit-exactly."""
+    from repro.serving.api import BatchingPolicy
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    fe = ParMFrontend(_linear_fwd, W, k=2, m=1, strategy="none",
+                      delay_fn=lambda i: 0.15,
+                      batching=BatchingPolicy(max_size=4, max_delay_ms=0.0))
+    try:
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(5)]
+        qs = [fe.submit(i, x) for i, x in enumerate(xs)]
+        assert fe.wait_all(timeout=30)
+        for q, x in zip(qs, xs):
+            np.testing.assert_allclose(
+                q.result, np.asarray(_linear_fwd(W, x)), atol=1e-4)
+        st = fe.stats()
+        # 5 queries arrived while the worker slept on the first: at most 3
+        # inference calls can have served them (1 + batch<=4 + remainder)
+        assert st["batches"] <= 3
+        assert st["mean_batch_size"] > 1.0
+        assert st["completed_by"]["model"] == 5
+    finally:
+        fe.shutdown()
+
+
+def test_des_adaptive_batching_stabilizes_overload():
+    """Above the unbatched capacity knee, adaptive batching (the per-batch
+    service curve at the ACTUAL dequeued batch size) must cut the tail and
+    report mean_batch_size > 1; the legacy static batch_size model is
+    untouched by the new knob."""
+    base = dict(n_queries=4000, qps=520, m=12, k=2, seed=1)
+    unbatched = simulate(SimConfig(**base), "parm")
+    batched = simulate(SimConfig(**base, batch_max_size=4), "parm")
+    assert batched["p999_ms"] < unbatched["p999_ms"] / 2, \
+        (batched["p999_ms"], unbatched["p999_ms"])
+    assert batched["mean_batch_size"] > 1.05
+    assert unbatched["mean_batch_size"] == 1.0
+    # both engines' reports carry the cancellation counters
+    assert batched["cancelled_queries"] >= 0
+    assert "cancelled_parities" in batched
+
+
+def test_des_cancellation_fires_under_load():
+    """Redundant-work cancellation under overload: default_slo tombstones
+    queued originals once the deadline answered them (the Clipper frontend
+    never re-serves an expired query), and parm drops undispatched parity
+    queries whose whole group already finished on the mains."""
+    cfg = SimConfig(n_queries=4000, qps=520, m=12, k=2, seed=1)
+    slo = simulate(cfg, "default_slo")
+    assert slo["cancelled_queries"] > 0
+    assert slo["completed_by"]["default"] > 0
+    parm = simulate(cfg, "parm")
+    assert parm["cancelled_parities"] > 0
+    assert parm["reconstructions"] > 0
