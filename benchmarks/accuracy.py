@@ -221,9 +221,29 @@ def bench_unavailability_schemes():
     gain = res["schemes"]["learned"] - res["schemes"]["sum"]
     print(f"resnet18_unavail_learned_minus_sum,{gain:+.3f},"
           f"learned_ge_sum={res['schemes']['learned'] >= res['schemes']['sum']}")
+    apx = res["schemes"]["approxifer"] - res["schemes"]["sum"]
+    print(f"resnet18_unavail_approxifer_minus_sum,{apx:+.3f},"
+          f"no_parity_training")
+
+
+def bench_error_rate_sweep():
+    """Byzantine robustness: accuracy of the served predictions as the
+    per-response error rate grows, sum (serves the garbage) vs approxifer
+    (votes it out with r=2 surplus responses and re-decodes)."""
+    from repro.eval.unavailability import accuracy_under_errors
+    res = accuracy_under_errors(
+        schemes=("sum", "approxifer"), error_rates=(0.0, 0.1, 0.25),
+        n_train=1500, n_test=400, noise=0.8, k=2, r=2,
+        deployed_epochs=3, parity_epochs=4, seed=0)
+    for name, per_rate in res["schemes"].items():
+        for rate, acc in per_rate.items():
+            print(f"resnet18_errors_{name}_rate{rate:g},{acc:.3f},")
+    gap = res["schemes"]["approxifer"][0.25] - res["schemes"]["sum"][0.25]
+    print(f"resnet18_errors_gap_at_25pct,{gap:+.3f},approxifer_minus_sum")
 
 
 ALL = [bench_table1_toy, bench_fig6_degraded_accuracy,
        bench_fig7_overall_accuracy, bench_fig8_localization,
        bench_fig9_vary_k, bench_fig10_task_specific_encoder,
-       bench_r2_concurrent_failures, bench_unavailability_schemes]
+       bench_r2_concurrent_failures, bench_unavailability_schemes,
+       bench_error_rate_sweep]

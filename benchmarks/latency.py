@@ -222,6 +222,19 @@ def bench_ci_smoke():
         put(f"smoke_batch{b}",
             simulate(SimConfig(n_queries=n, qps=520, m=12, k=2, seed=1,
                                batch_max_size=b), "parm"))
+    # Byzantine fault class (scenario="byzantine", r=2 so the detecting
+    # scheme holds voting surplus): the gate's first cross-scheme accuracy
+    # AND latency trend — the detected/corrected counters are the accuracy
+    # side (informational, seeded-deterministic), the *_ms metrics the
+    # latency side; sum runs the same hazards without detection
+    for scheme in ("approxifer", "sum"):
+        res = simulate(SimConfig(n_queries=n, qps=270, m=12, k=2, r=2,
+                                 seed=1),
+                       "parm", scheme=scheme, scenario="byzantine")
+        put(f"smoke_byzantine_{scheme}", res)
+        out[f"smoke_byzantine_{scheme}_corrupted_detected"] = \
+            res["corrupted_detected"]
+        out[f"smoke_byzantine_{scheme}_corrected"] = res["corrected"]
     for name, value in sorted(out.items()):
         print(f"{name},{value},ci_smoke")
     return out

@@ -14,6 +14,17 @@ Gating rules:
 * metrics new in the current run are reported but do not fail — they start
   gating once the baseline is refreshed.
 
+Exit codes: 0 = gate passed; 1 = at least one metric regressed (or went
+missing); 2 = the gate itself could not run (unreadable or malformed
+input) — distinct, so CI can tell "bench regressed" from "bench broke".
+
+Besides the CSV on stdout, the comparison is rendered as a GitHub-flavored
+markdown table (per-metric baseline vs current vs delta %) to
+``--markdown PATH``; when the flag is omitted and ``$GITHUB_STEP_SUMMARY``
+is set (any GitHub Actions job), the table is appended there, so a
+regression is readable in the run's Summary tab without downloading the
+BENCH_ci.json artifact.
+
 The smoke set is a seeded discrete-event simulation (numpy RNG), so values
 are bit-stable across machines: the gate trips on code changes that shift
 simulated latency semantics, not on CI-runner noise.  Refresh the baseline
@@ -26,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -54,21 +66,67 @@ def compare(current: dict, baseline: dict, threshold: float):
     return rows, failures
 
 
+def markdown_table(rows, failures, threshold: float) -> str:
+    """GitHub-flavored markdown rendering of ``compare``'s rows for
+    ``$GITHUB_STEP_SUMMARY``: per-metric baseline vs current vs delta %,
+    regressions called out up top."""
+    lines = ["## Bench gate"]
+    if failures:
+        lines.append(f"**:x: {len(failures)} metric(s) regressed beyond "
+                     f"{threshold:.0%}**")
+        lines.extend(f"- `{f}`" for f in failures)
+    else:
+        n = sum(1 for r in rows if r.endswith(",ok"))
+        lines.append(f":white_check_mark: {n} gated metrics within "
+                     f"{threshold:.0%} of baseline")
+    lines.append("")
+    lines.append("| metric | baseline | current | delta % | status |")
+    lines.append("|---|---:|---:|---:|---|")
+    for row in rows:
+        name, base, cur, ratio, status = row.split(",")
+        if status == "info":
+            delta = "new"
+        elif not ratio:
+            delta = "-"
+        else:
+            delta = f"{(float(ratio) - 1):+.1%}"
+        mark = {"ok": "ok", "REGRESSED": ":x: REGRESSED",
+                "FAIL": ":x: MISSING", "info": "info"}[status]
+        lines.append(f"| `{name}` | {base} | {cur} | {delta} | {mark} |")
+    return "\n".join(lines) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_ci.json")
     ap.add_argument("baseline", help="checked-in BENCH_baseline.json")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed relative regression (default 0.25)")
+    ap.add_argument("--markdown", default=None, metavar="PATH",
+                    help="append a GitHub-flavored summary table here "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args()
-    with open(args.current) as f:
-        current = json.load(f)["metrics"]
-    with open(args.baseline) as f:
-        baseline = json.load(f)["metrics"]
-    rows, failures = compare(current, baseline, args.threshold)
+    metrics = {}
+    for label, path in (("current", args.current),
+                        ("baseline", args.baseline)):
+        try:
+            with open(path) as f:
+                metrics[label] = json.load(f)["metrics"]
+        except (OSError, json.JSONDecodeError, KeyError, TypeError) as e:
+            # exit 2, not a traceback: "the gate could not run" must be
+            # distinguishable from "the gate tripped" (exit 1)
+            print(f"# bench gate cannot run: {label} file {path!r} is "
+                  f"unreadable or malformed ({e})", file=sys.stderr)
+            sys.exit(2)
+    rows, failures = compare(metrics["current"], metrics["baseline"],
+                             args.threshold)
     print("metric,baseline,current,ratio,status")
     for row in rows:
         print(row)
+    md_path = args.markdown or os.environ.get("GITHUB_STEP_SUMMARY")
+    if md_path:
+        with open(md_path, "a") as f:
+            f.write(markdown_table(rows, failures, args.threshold))
     if failures:
         print(f"\n# BENCH REGRESSION ({len(failures)} metric(s) beyond "
               f"{args.threshold:.0%}):", file=sys.stderr)

@@ -36,7 +36,12 @@ def main():
                     help="fault scenario (default: legacy shuffle load)")
     ap.add_argument("--batch-size", type=int, default=1,
                     help="adaptive-batching max batch size (main pool)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI subprocess dryruns: exercise "
+                         "the full strategy sweep in seconds")
     args = ap.parse_args()
+    if args.smoke:
+        args.n = min(args.n, 4000)
 
     trace = Trace(n_queries=args.n, qps=args.qps)
     load = args.scenario or "background network shuffles"

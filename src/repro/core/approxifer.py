@@ -1,0 +1,325 @@
+"""ApproxIFER-style rational-interpolation coding scheme ("approxifer").
+
+ApproxIFER (Soleymani et al., PAPERS.md) replaces ParM's learned parity
+models with a *model-agnostic* interpolation code: treat the k queries of a
+coding group as samples ``X_i = q(z_i)`` of a function over interpolation
+nodes ``z_i``, send the interpolant's values at ``r`` extra nodes as the
+parity queries, and serve EVERY query — originals and parities — with the
+*deployed* model itself.  Because the output trajectory
+``g(z) = F(q(z))`` is again (approximately) a low-order function of ``z``,
+the decoder simply re-interpolates ``g`` through **whichever responses
+actually arrived** and reads the missing members' outputs off the fit.
+NeRCC frames the same decode as regression over coded queries.
+
+Consequences realised here, and why this scheme stresses the plugin API:
+
+* **no training** — ``model_agnostic = True``: ``train_parity_models``
+  returns the deployed params as the "parity models"; a deployment
+  tolerates stragglers with zero retraining, for any deployed model.
+* **dynamic decode arity** — recoverability is not a fixed mask rule but a
+  count: ALL missing members decode as soon as the total number of arrived
+  responses (available members + arrived parities) reaches k.  The scheme
+  owns that rule via ``recoverable`` (the hook ``recoverable_rows``
+  honors), and its ``decode`` consumes however many responses exist.
+* **Byzantine robustness** — ``detects_errors = True``: with more than k
+  responses in hand the decoder has surplus equations, so gross erroneous
+  (corrupted) responses are *voted out* by subset-consistency
+  (``flag_errors``) and the affected predictions re-decoded from the
+  clean remainder.  Correcting e corruptions needs 2e surplus responses —
+  the classical error-correction margin.
+
+Numerics: nodes are a combined Chebyshev grid over [-1, 1] (members and
+parities interleaved), encode is the barycentric evaluation of the member
+interpolant at the parity nodes — a fixed [r, k] linear map (``coeffs``),
+so the Pallas fast path is one ``berrut_encode`` launch — and decode fits
+a degree-(k-1) Chebyshev-basis polynomial to the arrived responses by
+masked least squares.  ApproxIFER proper uses Berrut's O(1) barycentric
+weights for stability at large k; at serving-scale k (<= ~8) the full
+barycentric weights are equally stable and make the decoder *exact* on
+polynomial data — which is what lets the differential battery hold this
+scheme to the same bit-accuracy bar as the linear codes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from itertools import combinations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheme import register_scheme, _check_backend
+
+def chebyshev_nodes(n: int) -> np.ndarray:
+    """n Chebyshev points of the first kind on (-1, 1), decreasing."""
+    t = np.arange(1, n + 1, dtype=np.float64)
+    return np.cos((2.0 * t - 1.0) * np.pi / (2.0 * n))
+
+
+def split_nodes(k: int, r: int):
+    """Interleave one combined Chebyshev grid of k + r points into member
+    and parity nodes: parity nodes are spread evenly through the grid (a
+    clustered extra-node set would condition the refit poorly), members
+    take the rest.  Deterministic in (k, r)."""
+    n = k + r
+    grid = chebyshev_nodes(n)
+    pidx = sorted({int((s + 0.5) * n / r) for s in range(r)})
+    midx = [t for t in range(n) if t not in pidx]
+    return grid[midx], grid[pidx]
+
+
+def lagrange_eval_matrix(nodes: np.ndarray, at: np.ndarray) -> np.ndarray:
+    """L[j, i] = i-th Lagrange basis polynomial of ``nodes`` at ``at[j]``
+    (barycentric form; float64 for conditioning)."""
+    nodes = np.asarray(nodes, np.float64)
+    at = np.asarray(at, np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        bary = 1.0 / (at[:, None] - nodes[None, :])       # [m, n]
+    exact = ~np.isfinite(bary)
+    bary = np.where(exact, 0.0, bary)
+    w = np.array([1.0 / np.prod(nodes[i] - np.delete(nodes, i))
+                  for i in range(len(nodes))])            # barycentric weights
+    num = bary * w[None, :]
+    out = num / num.sum(axis=1, keepdims=True)
+    # evaluation point coincides with a node: the basis is an indicator
+    hit = exact.any(axis=1)
+    out[hit] = exact[hit].astype(np.float64)
+    return out
+
+
+def chebyshev_design(nodes: np.ndarray, deg: int) -> np.ndarray:
+    """Design matrix A[t, d] = T_d(nodes[t]) for d = 0..deg-1."""
+    nodes = np.asarray(nodes, np.float64)
+    a = np.empty((len(nodes), deg))
+    a[:, 0] = 1.0
+    if deg > 1:
+        a[:, 1] = nodes
+    for d in range(2, deg):
+        a[:, d] = 2.0 * nodes * a[:, d - 1] - a[:, d - 2]
+    return a
+
+
+@dataclass(frozen=True)
+class ApproxIFERScheme:
+    """Rational-interpolation code with a straggler-adaptive decoder; see
+    module docstring.  ``err_tol`` is the absolute residual above which a
+    surplus-checked response is voted out as corrupted."""
+
+    k: int
+    r: int = 1
+    backend: str = "jnp"
+    name: str = "approxifer"
+    err_tol: float = 100.0
+
+    # no parity model is trained: the deployed model serves the encoded
+    # queries too (train_parity_models returns the deployed params)
+    model_agnostic = True
+    # the decoder can vote out grossly erroneous responses when the group
+    # holds surplus responses (see flag_errors)
+    detects_errors = True
+    # recoverability is a response COUNT (arrived >= k), not a fixed mask
+    # rule: decode arity adapts to whatever arrived (see recoverable)
+    dynamic_arity = True
+
+    def __post_init__(self):
+        _check_backend(self.backend)
+        if self.k < 2:
+            raise ValueError(
+                f"approxifer interpolates over k >= 2 queries, got "
+                f"k={self.k}")
+        if self.r < 1:
+            raise ValueError(f"r must be >= 1, got r={self.r}")
+        z, w = split_nodes(self.k, self.r)
+        object.__setattr__(self, "_member_nodes", z)
+        object.__setattr__(self, "_parity_nodes", w)
+        # encode IS a fixed linear map: the member interpolant evaluated at
+        # the parity nodes
+        coeffs = lagrange_eval_matrix(z, w)               # [r, k]
+        object.__setattr__(
+            self, "_coeffs", jnp.asarray(coeffs, jnp.float32))
+        # decode design: T_0..T_{k-1} at every node (members then parities)
+        nodes = np.concatenate([z, w])
+        design = chebyshev_design(nodes, self.k)          # [k + r, k]
+        object.__setattr__(
+            self, "_design", jnp.asarray(design, jnp.float32))
+        object.__setattr__(self, "_design_np", design)
+        # r=1 hot path: reconstructing member j from the k - 1 other
+        # members plus parity 0 is again a fixed linear map per j
+        one = np.zeros((self.k, self.k + 1))
+        for j in range(self.k):
+            arr = np.concatenate([np.delete(z, j), w[:1]])
+            lj = lagrange_eval_matrix(arr, z[j:j + 1])[0]  # [k]
+            one[j, :self.k - 1] = lj[:self.k - 1]
+            one[j, self.k] = lj[self.k - 1]
+        object.__setattr__(self, "_decode_one_w", one)
+
+    @property
+    def coeffs(self):
+        return self._coeffs
+
+    @property
+    def member_nodes(self):
+        return self._member_nodes
+
+    @property
+    def parity_nodes(self):
+        return self._parity_nodes
+
+    # ------------------------------------------------------------- encode --
+    def encode(self, queries):
+        """queries [k, ...] -> parity queries [r, ...]: the member
+        interpolant evaluated at the r extra Chebyshev nodes."""
+        queries = jnp.asarray(queries)
+        assert queries.shape[0] == self.k, queries.shape
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            q = queries
+            batched = q.ndim > 1
+            if not batched:
+                q = q[:, None]
+            out = ops.berrut_encode_op(q, self.coeffs)
+            return out if batched else out[:, 0]
+        c = self.coeffs.astype(queries.dtype)
+        return jnp.tensordot(c, queries, axes=1)
+
+    __call__ = encode
+
+    def encode_cost(self):
+        """One linear pass over the group — the calibration point."""
+        return 1.0
+
+    # ------------------------------------------------------------- decode --
+    def decode(self, parity_outs, outputs, missing_mask, parity_avail=None):
+        """Straggler-adaptive decode: fit the degree-(k-1) Chebyshev-basis
+        interpolant through every response that arrived (masked least
+        squares over the k + r node grid) and evaluate it at the missing
+        members' nodes.  Arity is whatever arrived — exact whenever at
+        least k responses are in, for data on a degree-(k-1) trajectory."""
+        parity_outs = jnp.asarray(parity_outs).astype(jnp.float32)
+        outs = jnp.asarray(outputs).astype(jnp.float32)
+        missing_mask = jnp.asarray(missing_mask)
+        if parity_avail is None:
+            parity_avail = jnp.ones((self.r,), bool)
+        avail = jnp.concatenate([
+            (~missing_mask).astype(jnp.float32),
+            jnp.asarray(parity_avail).astype(jnp.float32)])      # [k + r]
+        y = jnp.concatenate([outs, parity_outs], axis=0)         # [k + r, ...]
+        a = self._design * avail[:, None]                        # [k + r, k]
+        g = a.T @ a + 1e-9 * jnp.eye(self.k)
+        rhs = jnp.einsum("td,t...->d...", a, y * avail.reshape(
+            (-1,) + (1,) * (y.ndim - 1)))
+        flat = rhs.reshape(self.k, -1)
+        c = jnp.linalg.solve(g, flat).reshape(rhs.shape)         # [k, ...]
+        fit = jnp.einsum("td,d...->t...", self._design[:self.k], c)
+        mm = missing_mask.reshape((self.k,) + (1,) * (outs.ndim - 1))
+        return jnp.where(mm, fit, outs)
+
+    def decode_one(self, parity_out, outputs, missing_idx):
+        """r=1 hot path: the refit through (k - 1 members + the parity) is
+        a fixed linear combination per missing index, so it routes through
+        the same subtraction-decode Pallas kernel as the linear codes."""
+        w = self._decode_one_w[missing_idx]               # [k + 1]
+        beta = w[self.k]
+        # synthesize coeffs c with c[i] = -alpha_i / beta (i != j) and
+        # c[j] = 1 / beta: parity_decode computes
+        # (parity - sum_i c_i * out_i) / c[j] = beta * parity + alpha . out
+        alpha = w[:self.k - 1]                            # [k - 1] weights
+        c = np.empty(self.k, np.float64)
+        pos = 0
+        for i in range(self.k):
+            if i == missing_idx:
+                c[i] = 1.0 / beta
+            else:
+                c[i] = -alpha[pos] / beta
+                pos += 1
+        if self.backend == "pallas":
+            from repro.core.scheme import _pallas_decode_one
+            return _pallas_decode_one(parity_out, outputs, missing_idx,
+                                      jnp.asarray(c, jnp.float32))
+        cj = jnp.asarray(c, jnp.float32)
+        outs = jnp.asarray(outputs).astype(jnp.float32)
+        mask = jnp.arange(self.k) != missing_idx
+        avail_sum = jnp.einsum("k,k...->...", cj * mask, outs)
+        po = jnp.asarray(parity_out).astype(jnp.float32)
+        return (po - avail_sum) / cj[missing_idx]
+
+    # ------------------------------------------------- dynamic-arity rules --
+    def recoverable(self, missing_mask, parity_avail):
+        """Dynamic arity: every missing member decodes as soon as the total
+        arrived-response count (available members + arrived parities)
+        reaches k — the decoder interpolates through whatever arrived, so
+        there is no per-row or fixed-mask structure to consult."""
+        missing_mask = np.asarray(missing_mask, bool)
+        parity_avail = np.asarray(parity_avail, bool)
+        arrived = (~missing_mask).sum() + parity_avail.sum()
+        if arrived >= self.k:
+            return missing_mask
+        return np.zeros_like(missing_mask)
+
+    def decode_cost(self, n_missing):
+        """One refit of the [k, k] system serves ALL missing rows at once,
+        so the hint is flat in n_missing (roughly two subtraction decodes
+        of setup), unlike the linear default that scales per row."""
+        del n_missing
+        return 2.0
+
+    # ---------------------------------------------------- Byzantine voting --
+    def max_correctable(self, n_arrived: int) -> int:
+        """Errors correctable from ``n_arrived`` responses: the surplus
+        over k pays 2 responses per corrected error."""
+        return max(0, (n_arrived - self.k) // 2)
+
+    def flag_errors(self, member_outs, member_avail, parity_outs,
+                    parity_avail):
+        """Vote out grossly erroneous responses by subset consistency.
+
+        Given the responses that arrived (``member_avail`` [k] /
+        ``parity_avail`` [r] mark arrivals), search for the smallest set of
+        e <= (n_arrived - k) / 2 responses whose removal leaves the rest
+        consistent with one degree-(k-1) interpolant (residuals under
+        ``err_tol``).  Returns boolean ``(member_flags [k],
+        parity_flags [r])`` — all False when the group lacks the surplus
+        to vote, or when everything is consistent.  Pure numpy: this runs
+        on the frontend's decode path, outside jit, on <= k + r responses.
+        """
+        member_avail = np.asarray(member_avail, bool)
+        parity_avail = np.asarray(parity_avail, bool)
+        mo = np.asarray(member_outs, np.float64).reshape(self.k, -1)
+        po = np.asarray(parity_outs, np.float64).reshape(self.r, -1)
+        idxs = np.concatenate([np.nonzero(member_avail)[0],
+                               self.k + np.nonzero(parity_avail)[0]])
+        n_t = len(idxs)
+        mflags = np.zeros(self.k, bool)
+        pflags = np.zeros(self.r, bool)
+        e_max = self.max_correctable(n_t)
+        if e_max < 1:
+            return mflags, pflags
+        vals = np.concatenate([mo, po], axis=0)[idxs]     # [n_t, D]
+        design = self._design_np[idxs]                    # [n_t, k]
+
+        def residual(sel):
+            a = design[sel]
+            y = vals[sel]
+            c, *_ = np.linalg.lstsq(a, y, rcond=None)
+            return np.abs(a @ c - y).max()
+
+        if residual(np.arange(n_t)) <= self.err_tol:
+            return mflags, pflags                          # all consistent
+        for e in range(1, e_max + 1):
+            for drop in combinations(range(n_t), e):
+                keep = np.setdiff1d(np.arange(n_t), drop)
+                if residual(keep) <= self.err_tol:
+                    for t in drop:
+                        node = idxs[t]
+                        if node < self.k:
+                            mflags[node] = True
+                        else:
+                            pflags[node - self.k] = True
+                    return mflags, pflags
+        return mflags, pflags                              # ambiguous: abstain
+
+
+register_scheme(
+    "approxifer",
+    lambda k, r=1, backend="jnp", **kw: ApproxIFERScheme(
+        k=k, r=r, backend=backend, **kw))

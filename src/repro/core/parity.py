@@ -176,6 +176,12 @@ def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=None,
         scheme = encoder_kind
     scheme = get_scheme(scheme, k=k, r=r)
     pfwd = parity_fwd or fwd
+    if getattr(scheme, "model_agnostic", False):
+        # approxifer-style interpolation codes need NO parity training: the
+        # deployed model itself serves the encoded queries (the decoder
+        # re-interpolates its outputs), so the "parity models" are r copies
+        # of the deployed params and the pipeline is a no-op
+        return [deployed_params] * scheme.r, scheme
     fx = np.asarray(jax.jit(fwd)(deployed_params, jnp.asarray(x_train)))
     if use_true_labels:
         fx = np.eye(n_classes, dtype=np.float32)[labels] * 10.0  # scaled one-hot

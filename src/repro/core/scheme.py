@@ -36,6 +36,13 @@ Built-in entries:
                      encoder (Vandermonde base code + a small MLP residual
                      over the coding dimension) trained jointly with the
                      parity models; decode is still the linear output code.
+* ``approxifer``   — ``repro.core.approxifer.ApproxIFERScheme``: the
+                     ApproxIFER-style rational-interpolation code.  No
+                     parity model is trained (``model_agnostic``) — the
+                     deployed model serves the encoded queries — and the
+                     decoder adapts its arity to however many responses
+                     arrived, voting out erroneous (Byzantine) responses
+                     when it holds surplus ones (``detects_errors``).
 
 ``backend="jnp" | "pallas"`` selects the implementation of the hot paths:
 ``pallas`` routes encode / r=1-decode through the Pallas TPU kernels in
@@ -87,9 +94,11 @@ def recoverable_rows(scheme, missing_mask, parity_avail):
     The single recoverability rule BOTH serving layers consult (the threaded
     ``ParMFrontend`` and the DES ``simulate``), so their decode decisions
     cannot drift.  A scheme may refine it with an optional
-    ``recoverable(missing_mask, parity_avail)`` method (replication: per-row
-    replica arrival); the default is the MDS rule — all-or-nothing while
-    #missing <= #parities arrived.
+    ``recoverable(missing_mask, parity_avail)`` method — replication's
+    per-row replica arrival, or approxifer's dynamic-arity count (decode
+    whenever the total number of *arrived* responses reaches k, however
+    they split between members and parities); the default is the MDS rule —
+    all-or-nothing while #missing <= #parities arrived.
     """
     missing_mask = np.asarray(missing_mask, bool)
     parity_avail = np.asarray(parity_avail, bool)
@@ -452,4 +461,8 @@ register_scheme(
 # subclasses LinearScheme and calls register_scheme from this module.
 from repro.core import learned as _learned  # noqa: E402  (registration)
 
-del _learned
+# the approxifer scheme (rational-interpolation code with a dynamic-arity
+# decoder) likewise registers itself on import
+from repro.core import approxifer as _approxifer  # noqa: E402  (registration)
+
+del _learned, _approxifer

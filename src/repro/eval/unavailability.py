@@ -18,11 +18,25 @@ layers use, so this is also an end-to-end exercise of the plugin API:
 * ``approx_backup``     — k=1 groups; "parity training" degenerates to
                           distilling a *cheaper* backup architecture
                           (``backup_model``), and A_d is the backup's
-                          accuracy — the §5.2.6 baseline as a scheme.
+                          accuracy — the §5.2.6 baseline as a scheme;
+* ``approxifer``        — the rational-interpolation code: NO parity
+                          training at all (``model_agnostic`` — the
+                          deployed model serves the encoded queries), A_d
+                          is pure interpolation quality.
+
+``accuracy_under_errors`` extends the methodology to the Byzantine fault
+class: all responses arrive, but a fraction of the member responses is
+*erroneous* (garbage at ``CORRUPTION_SCALE``).  A ``detects_errors``
+scheme (approxifer) votes the corrupted responses out using its surplus
+parity responses and re-decodes them; schemes without detection serve the
+garbage — sweeping the error rate across sum / learned / approxifer shows
+the robustness gap the straggler-only A_a/A_d metrics cannot.
 
 Used by ``benchmarks/accuracy.py`` (``bench_unavailability_schemes``) and
 locked by ``tests/test_learned_scheme.py`` (learned >= sum on
-resnet18_cifar, the ROADMAP acceptance bar for learned codes).
+resnet18_cifar, the ROADMAP acceptance bar for learned codes) and
+``tests/test_approxifer_eval.py`` (approxifer A_d within 5 points of sum,
+and error-sweep robustness).
 """
 from __future__ import annotations
 
@@ -38,7 +52,8 @@ from repro.models.cnn import build
 from repro.training.loss import softmax_xent
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
-DEFAULT_SCHEMES = ("sum", "concat", "learned", "approx_backup")
+DEFAULT_SCHEMES = ("sum", "concat", "learned", "approx_backup",
+                   "approxifer")
 
 
 def _train_deployed(x, y, model, image_shape, n_classes, epochs, seed):
@@ -114,4 +129,87 @@ def accuracy_under_unavailability(schemes=DEFAULT_SCHEMES, *, model="resnet",
             epochs=parity_epochs, seed=seed, parity_fwd=pfwd)
         results[name] = _degraded(scheme, pp, pfwd, params, fwd, xt, yt,
                                   n_classes)
+    return {"A_a": a_a, "schemes": results}
+
+
+def _served_under_errors(scheme, member, parity_outs, corrupt):
+    """Predictions actually served for one error realization.
+
+    member [G, k, V] true member outputs; parity_outs [G, r, V];
+    ``corrupt`` [G, k] marks erroneous member responses (replaced by
+    garbage at CORRUPTION_SCALE).  A ``detects_errors`` scheme votes the
+    garbage out per group and re-decodes the flagged members from the
+    clean remainder; every other scheme serves the garbage as-is."""
+    from repro.serving.scenarios import CORRUPTION_SCALE
+    g_n, k, v = member.shape
+    served = member.copy()
+    served[corrupt] = CORRUPTION_SCALE
+    if not getattr(scheme, "detects_errors", False):
+        return served
+    r = scheme.r
+    ones_m = np.ones(k, bool)
+    ones_p = np.ones(r, bool)
+    for g in np.nonzero(corrupt.any(axis=1))[0]:
+        mflags, pflags = scheme.flag_errors(served[g], ones_m,
+                                            parity_outs[g], ones_p)
+        if not mflags.any():
+            continue                      # below the voting margin: served
+        recon = np.asarray(scheme.decode(
+            jnp.asarray(parity_outs[g] * ~pflags[:, None]),
+            jnp.asarray(served[g]), jnp.asarray(mflags),
+            jnp.asarray(~pflags)))
+        served[g][mflags] = recon[mflags]
+    return served
+
+
+def accuracy_under_errors(schemes=("sum", "learned", "approxifer"), *,
+                          error_rates=(0.0, 0.1, 0.25), model="resnet",
+                          image_shape=IMAGE_SHAPE, n_classes=10, k=2, r=2,
+                          n_train=1500, n_test=600, noise=2.0,
+                          deployed_epochs=3, parity_epochs=5, seed=0):
+    """Accuracy when member responses are *erroneous* (Byzantine), swept
+    over the per-response error rate.  All responses arrive (the straggler
+    axis is ``accuracy_under_unavailability``); each member response is
+    independently corrupted with probability ``rate``.  ``r`` extra
+    responses per group give a ``detects_errors`` scheme the surplus it
+    needs to vote garbage out (r >= 2 corrects one error per group).
+
+    Returns ``{"A_a": float, "schemes": {name: {rate: accuracy}}}`` —
+    accuracy of the predictions actually served, over all members."""
+    x, y, tmpl = cluster_images(n_train, noise=noise, seed=seed,
+                                image_shape=image_shape, n_classes=n_classes)
+    xt, yt, _ = cluster_images(n_test, noise=noise, seed=seed + 1,
+                               templates=tmpl, image_shape=image_shape,
+                               n_classes=n_classes)
+    params, fwd = _train_deployed(x, y, model, image_shape, n_classes,
+                                  deployed_epochs, seed)
+    a_a = topk_accuracy(np.asarray(fwd(params, jnp.asarray(xt))), yt)
+
+    results = {}
+    for name in schemes:
+        init_fn = lambda kk: build(model, kk, image_shape=image_shape,
+                                   n_out=n_classes)[0]
+        pp, scheme = train_parity_models(
+            params, fwd, init_fn, x, k=k, r=r, scheme=name,
+            epochs=parity_epochs, seed=seed)
+        gk = scheme.k
+        n = (len(xt) // gk) * gk
+        groups = xt[:n].reshape(-1, gk, *xt.shape[1:])
+        glabels = yt[:n].reshape(-1, gk)
+        member = np.asarray(fwd(params, jnp.asarray(
+            groups.reshape(n, *xt.shape[1:])))).reshape(-1, gk, n_classes)
+        pq = np.asarray(scheme.encode(
+            jnp.asarray(np.moveaxis(groups, 1, 0))))
+        parity_outs = np.stack(
+            [np.asarray(fwd(pp[j], jnp.asarray(pq[j])))
+             for j in range(scheme.r)], axis=1)            # [G, r, V]
+        per_rate = {}
+        for rate in error_rates:
+            rng = np.random.default_rng(seed + int(rate * 1000))
+            corrupt = rng.random(member.shape[:2]) < rate
+            served = _served_under_errors(scheme, member, parity_outs,
+                                          corrupt)
+            per_rate[rate] = float(
+                (np.argmax(served, -1) == glabels).mean())
+        results[name] = per_rate
     return {"A_a": a_a, "schemes": results}

@@ -1,0 +1,26 @@
+"""Pallas TPU route for the Berrut/barycentric encode projection — the
+fixed linear map from the k member queries to the r rational-interpolation
+parity queries of the approxifer scheme,
+
+    out[j] = sum_i C[j, i] * Q[i]          (Q [k, B, F], C [r, k])
+
+This is *exactly* the learned-encoder final projection with the weight
+matrix transposed: ``learned_project(h, w)`` computes
+``out[j] = sum_h W[h, j] * H[h]`` over its hidden dimension, so with
+``h = Q`` (reduce over k instead of H) and ``w = C.T`` the same kernel —
+same (r, B-tiles, F-tiles) grid, same HBM->VMEM streaming, same fp32
+VREG accumulation, all r output rows in one launch — serves both call
+surfaces.  Delegating instead of duplicating keeps one Mosaic kernel to
+tune: block sizes, dtype handling and TPU-alignment fixes land in
+``learned_encoder.py`` once and both encoders inherit them.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.learned_encoder import learned_project
+
+
+def berrut_encode(q, c, *, block_b=8, block_f=512, interpret=False):
+    """q [k, B, F]; c [r, k] -> [r, B, F] (one launch for all r rows)."""
+    return learned_project(q, c.T, block_b=block_b, block_f=block_f,
+                           interpret=interpret)

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels.parity_encode import parity_encode as _encode
 from repro.kernels.parity_decode import parity_decode as _decode
 from repro.kernels.learned_encoder import learned_project as _project
+from repro.kernels.berrut_encoder import berrut_encode as _berrut
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 
@@ -38,6 +39,15 @@ def parity_decode_op(parity_out, outputs, missing_idx, coeffs=None, **kw):
     inv_c = 1.0 / c[missing_idx]
     return _decode(parity_out, outputs, avail, inv_c,
                    interpret=_interpret(), **kw)
+
+
+def berrut_encode_op(queries, coeffs, **kw):
+    """Approxifer encode projection: queries [k, B, ...] (any trailing
+    feature shape); coeffs [r, k] -> [r, B, ...], one launch for all r."""
+    k, B = queries.shape[:2]
+    flat = queries.reshape(k, B, -1)
+    out = _berrut(flat, coeffs, interpret=_interpret(), **kw)
+    return out.reshape((coeffs.shape[0], B) + queries.shape[2:])
 
 
 def learned_project_op(h, w, **kw):

@@ -16,7 +16,12 @@ New in this report (vs the old dicts):
   mirror copies of already-answered queries), and undispatched parity queries
   dropped because every original in their group already finished;
 * ``batches`` / ``mean_batch_size``    — adaptive-batching bookkeeping: how
-  many main-pool inference calls ran and how many queries each carried.
+  many main-pool inference calls ran and how many queries each carried;
+* ``corrupted_detected`` / ``corrected`` — Byzantine bookkeeping: erroneous
+  responses a ``detects_errors`` scheme (approxifer) voted out, and how
+  many of the affected predictions were nonetheless served from a clean
+  reconstruction.  Both default to 0, so report consumers and schemes that
+  never inject or detect errors are unaffected.
 """
 
 from __future__ import annotations
@@ -53,6 +58,8 @@ class ServingReport(Mapping):
     cancelled_parities: int = 0
     batches: int = 0
     mean_batch_size: float = 1.0
+    corrupted_detected: int = 0
+    corrected: int = 0
 
     # -- Mapping protocol: old ``stats()["p999_ms"]`` call sites keep
     # working.  The view is exactly the dataclass fields plus the derived
@@ -86,4 +93,7 @@ class ServingReport(Mapping):
             f" n={self.n} median={self.median_ms:.1f}ms"
             f" p99={self.p99_ms:.1f}ms p99.9={self.p999_ms:.1f}ms"
             f" recon={self.reconstructions} cancelled={self.cancellations}"
+            + (f" corrupted={self.corrupted_detected}"
+               f"/corrected={self.corrected}"
+               if self.corrupted_detected else "")
         )

@@ -29,7 +29,13 @@ are properties of the *frontend*, not of the code:
   fired) is tombstoned and skipped at dequeue, and an undispatched parity
   query whose group has every original answered is dropped the same way —
   both counted in ``ServingReport.cancelled_queries`` /
-  ``cancelled_parities``.
+  ``cancelled_parities``;
+* **Byzantine screening**: under a corrupt-output scenario the workers'
+  ``corrupt_fn`` adapter garbles real outputs (``CORRUPTION_SCALE``), and a
+  ``detects_errors`` scheme (approxifer) votes recorded responses out via
+  ``flag_errors`` whenever the group holds surplus responses — evicted
+  responses never answer their query nor enter a decode; counts surface as
+  ``ServingReport.corrupted_detected`` / ``corrected``.
 
 Used by the end-to-end example (examples/serve_parm.py) and integration tests;
 the 100k-query tail studies use the DES in ``repro.serving.simulator``.
@@ -49,7 +55,8 @@ import numpy as np
 from repro.core.scheme import get_scheme, recoverable_rows
 from repro.serving.api import BatchingPolicy, DeploymentSpec
 from repro.serving.report import ServingReport
-from repro.serving.scenarios import get_scenario, instance_id
+from repro.serving.scenarios import (CORRUPTION_SCALE, get_scenario,
+                                     instance_id)
 from repro.serving.strategy import get_strategy
 
 # worker-shutdown sentinel: one per worker is pushed onto its pool queue so a
@@ -105,7 +112,8 @@ class ModelInstance(threading.Thread):
                  skip_fn: Optional[Callable] = None,
                  batching: Optional[BatchingPolicy] = None,
                  on_batch: Optional[Callable[[int], None]] = None,
-                 on_done_batch: Optional[Callable] = None):
+                 on_done_batch: Optional[Callable] = None,
+                 corrupt_fn: Optional[Callable[[int], bool]] = None):
         super().__init__(daemon=True)
         self.iid = iid
         self.pool_q = pool_q
@@ -117,7 +125,17 @@ class ModelInstance(threading.Thread):
         self.batching = batching
         self.on_batch = on_batch
         self.on_done_batch = on_done_batch
+        self.corrupt_fn = corrupt_fn
         self.stop = False
+
+    def _maybe_corrupt(self, out):
+        """Byzantine injection (``corrupt_fn`` adapter, the ``delay_fn``
+        twin): while a corrupt window is active on this instance, the
+        response is garbage at ``CORRUPTION_SCALE`` — real numerical
+        corruption the decode path must detect, not a flag."""
+        if self.corrupt_fn is not None and self.corrupt_fn(self.iid):
+            return np.full_like(out, CORRUPTION_SCALE)
+        return out
 
     def _collect(self, first):
         """Fill a batch: up to ``max_size`` items, holding the batch open at
@@ -163,7 +181,8 @@ class ModelInstance(threading.Thread):
                     time.sleep(d)
             if len(items) == 1:
                 tag, payload, x = items[0]
-                out = np.asarray(self.fwd(self.params, x))
+                out = self._maybe_corrupt(np.asarray(self.fwd(self.params,
+                                                              x)))
                 if self.on_batch is not None:
                     self.on_batch(1)
                 self.on_done(tag, payload, out)
@@ -181,7 +200,8 @@ class ModelInstance(threading.Thread):
                 for idxs in groups.values():
                     stacked = np.concatenate([items[i][2] for i in idxs],
                                              axis=0)
-                    out = np.asarray(self.fwd(self.params, stacked))
+                    out = self._maybe_corrupt(
+                        np.asarray(self.fwd(self.params, stacked)))
                     if self.on_batch is not None:
                         self.on_batch(len(idxs))
                     ofs = 0
@@ -343,6 +363,13 @@ class ParMFrontend:
         self.cancelled_parities = 0   # undispatched parities dropped
         self._n_batches = 0           # main-pool inference calls
         self._n_batch_queries = 0     # queries those calls carried
+        # Byzantine bookkeeping: responses the scheme voted out, and how
+        # many of the affected predictions were served clean regardless.
+        # _detecting is finalized below once the scenario adapters exist:
+        # screening only runs when corruption can actually be injected
+        self._detecting = False
+        self.corrupted_detected = 0
+        self.corrupted_corrected = 0
 
         layout = self.strategy.layout(m, k, self.r)
         scenario = spec.scenario
@@ -350,18 +377,28 @@ class ParMFrontend:
             scenario = self.strategy.scenario
         self.scenario = None
         delay_fn = spec.delay_fn
+        corrupt_fn = None
         if scenario is not None:
-            # fault-injection adapter: the scenario's hazard windows become
-            # per-instance delays, composed with any user delay_fn
+            # fault-injection adapters off ONE realized plan: the
+            # scenario's hazard windows become per-instance delays
+            # (composed with any user delay_fn), and its corrupt windows
+            # per-instance output corruption
             self.scenario = get_scenario(scenario)
             pool_sizes = {"main": layout.main}
             if self.strategy.coded and layout.parity:
                 for j in range(self.r):
                     pool_sizes[f"parity{j}"] = layout.parity
-            delay_fn = self.scenario.delay_fn(
+            delay_fn, corrupt_fn = self.scenario.adapters(
                 pool_sizes, seed=spec.scenario_seed,
                 horizon_ms=spec.scenario_horizon_ms,
                 time_scale=spec.scenario_time_scale, extra=delay_fn)
+        # screening costs an lstsq vote under the frontend lock per
+        # arrival once a group holds surplus responses — only pay it when
+        # corruption can actually exist (the DES gates its revote on a
+        # non-empty candidate set the same way)
+        self._detecting = self.strategy.coded and \
+            getattr(self.scheme, "detects_errors", False) and \
+            corrupt_fn is not None
         self.main_q = queue.Queue()
         self.workers = []
         main_batching = self.batching if self.batching.max_size > 1 else None
@@ -371,7 +408,8 @@ class ParMFrontend:
                               skip_fn=self._should_skip,
                               batching=main_batching,
                               on_batch=self._note_batch,
-                              on_done_batch=self._on_model_batch_done)
+                              on_done_batch=self._on_model_batch_done,
+                              corrupt_fn=corrupt_fn)
             w.start()
             self.workers.append(w)
         if self.strategy.coded:
@@ -393,7 +431,8 @@ class ParMFrontend:
                                       spec.parity_fwd or fwd,
                                       parity_params[j],
                                       self._on_parity_done, delay_fn,
-                                      skip_fn=self._should_skip)
+                                      skip_fn=self._should_skip,
+                                      corrupt_fn=corrupt_fn)
                     w.start()
                     self.workers.append(w)
             self.parity_q = self.parity_qs[0]      # back-compat alias
@@ -423,7 +462,7 @@ class ParMFrontend:
                     outs = {m: self._early_outs.pop(m) for m in members
                             if m in self._early_outs}
                     self.groups[gid] = {"members": members, "outs": outs,
-                                        "parity": {}}
+                                        "parity": {}, "corrupt_m": set()}
                     to_encode = (gid, np.stack(
                         [self.queries[m].data for m in members]))
             # enqueue under the same lock as the _shutdown check: a
@@ -531,7 +570,17 @@ class ParMFrontend:
                     touched[gid] = info
                 else:
                     self._early_outs[qid] = out
+            # Byzantine screening BEFORE fulfillment: a recorded output a
+            # detects_errors scheme votes out must neither answer its own
+            # query nor poison later decodes of its group-mates
+            for gid, info in touched.items():
+                self._screen(info)
             for qid, out in pairs:
+                gid = self.gid_of.get(qid)
+                info = self.groups.get(gid)
+                if info is not None and qid in info["corrupt_m"] and \
+                        qid not in info["outs"]:
+                    continue        # voted out; _maybe_decode serves it
                 self.queries[qid].fulfill(out, "model")
             for gid, info in touched.items():
                 self._maybe_decode(gid, info)
@@ -543,6 +592,7 @@ class ParMFrontend:
             if info is None:
                 return
             info["parity"][j] = out
+            self._screen(info)
             self._maybe_decode(gid, info)
 
     def _recoverable(self, miss_mask, parity_avail):
@@ -551,32 +601,94 @@ class ParMFrontend:
         — so the two serving layers cannot drift on decode decisions."""
         return recoverable_rows(self.scheme, miss_mask, parity_avail)
 
+    def _screen(self, info):
+        """Byzantine vote (``detects_errors`` schemes), with the lock held,
+        after new responses were recorded: hand the group's recorded
+        responses to ``scheme.flag_errors`` and evict whatever it votes
+        out, so a corrupted response neither answers its own query nor
+        poisons later decodes of its group-mates.  A voted-out member the
+        clean remainder can re-decode right now is left missing for
+        ``_maybe_decode`` (which serves it clean and counts it corrected);
+        one it cannot is fulfilled with the suspect output — detected but
+        uncorrectable, matching the DES's end-of-run drain.  A voted-out
+        response whose query was already answered counts as corrected only
+        if that answer came from a clean parity reconstruction."""
+        if not self._detecting:
+            return
+        members = info["members"]
+        mo, po = info["outs"], info["parity"]
+        member_avail = np.array([m in mo for m in members])
+        parity_avail = np.array([j in po for j in range(self.r)])
+        if member_avail.sum() + parity_avail.sum() <= self.group_k:
+            return                      # no surplus: nothing to vote with
+        ref = next(iter(mo.values())) if mo else next(iter(po.values()))
+        zeros = np.zeros_like(ref)
+        mouts = np.stack([mo.get(m, zeros) for m in members])
+        pouts = np.stack([po.get(j, zeros) for j in range(self.r)])
+        mflags, pflags = self.scheme.flag_errors(
+            mouts, member_avail, pouts, parity_avail)
+        for j in np.nonzero(pflags)[0]:
+            # eviction is the whole effect: an absent parity can neither be
+            # re-delivered nor re-flagged, so no set tracks it
+            po.pop(int(j), None)
+            self.corrupted_detected += 1
+        for i in np.nonzero(mflags)[0]:
+            m = members[int(i)]
+            out = mo.pop(m)
+            info["corrupt_m"].add(m)
+            self.corrupted_detected += 1
+            q = self.queries[m]
+            if q.event.is_set():
+                if q.completed_by == "parity":
+                    self.corrupted_corrected += 1
+                continue
+            miss = np.array([mm not in mo for mm in members])
+            pa = np.array([j in po for j in range(self.r)])
+            if not self._recoverable(miss, pa)[int(i)]:
+                # uncorrectable: serve the suspect output rather than hang
+                q.fulfill(out, "model")
+
     def _maybe_decode(self, gid, info):
         """Called with lock held: reconstruct up to ``n_parities_arrived``
-        missing predictions (r=1 fast path: subtraction decoder)."""
+        missing predictions (r=1 fast path: subtraction decoder).  A member
+        is missing when the group holds no (trustworthy) response for it —
+        a voted-out corrupt response leaves its member missing even though
+        the query may already be answered, so the decoder never feeds
+        known-bad data (or placeholder zeros) into a reconstruction."""
         if not info["parity"]:
             return
         members = info["members"]
-        miss_mask = np.array([m not in info["outs"]
-                              and not self.queries[m].event.is_set()
-                              for m in members])
+        miss_mask = np.array([m not in info["outs"] for m in members])
         parity_avail = np.array([j in info["parity"]
                                  for j in range(self.r)])
         miss_mask = self._recoverable(miss_mask, parity_avail)
-        missing = [m for m, miss in zip(members, miss_mask) if miss]
+        # only still-unanswered members need serving; answered ones stay in
+        # miss_mask so the decode math never uses their absent/evicted data
+        missing = [m for m, miss in zip(members, miss_mask)
+                   if miss and not self.queries[m].event.is_set()]
         if not missing:
             return
         any_out = next(iter(info["parity"].values()))
         outs = np.stack([info["outs"].get(m, np.zeros_like(any_out))
                          for m in members])
-        if self.r == 1 and len(missing) == 1:
+
+        def fulfill_clean(m, recon):
+            q = self.queries[m]
+            newly = not q.event.is_set()
+            q.fulfill(recon, "parity")
+            if newly and m in info["corrupt_m"]:
+                # this member's own response was voted out as corrupted;
+                # it was just served from a clean reconstruction instead
+                self.corrupted_corrected += 1
+
+        if self.r == 1 and len(missing) == 1 and miss_mask.sum() == 1:
             j = members.index(missing[0])
             if self.decode_fn is not None:
                 recon = self.decode_fn(info["parity"][0], outs, j)
             else:
                 recon = np.asarray(self.scheme.decode_one(
                     info["parity"][0], outs, j))
-            self.queries[missing[0]].fulfill(recon, "parity")
+            fulfill_clean(missing[0], recon)
             return
         parity_outs = np.stack([
             info["parity"].get(j, np.zeros_like(any_out))
@@ -585,7 +697,7 @@ class ParMFrontend:
             jnp.asarray(parity_outs), jnp.asarray(outs),
             jnp.asarray(miss_mask), jnp.asarray(parity_avail)))
         for m in missing:
-            self.queries[m].fulfill(recon[members.index(m)], "parity")
+            fulfill_clean(m, recon[members.index(m)])
 
     # ------------------------------------------------------------------
     def wait_all(self, timeout=60.0):
@@ -649,6 +761,7 @@ class ParMFrontend:
             queries = list(self.queries.values())
             cq, cp = self.cancelled_queries, self.cancelled_parities
             nb, nbq = self._n_batches, self._n_batch_queries
+            cd, cc = self.corrupted_detected, self.corrupted_corrected
         lats = np.array([q.latency_ms for q in queries
                          if q.event.is_set() and q.completed_by != "flushed"])
         by = {}
@@ -675,4 +788,6 @@ class ParMFrontend:
             cancelled_queries=cq,
             cancelled_parities=cp,
             batches=nb,
-            mean_batch_size=(nbq / nb) if nb else 1.0)
+            mean_batch_size=(nbq / nb) if nb else 1.0,
+            corrupted_detected=cd,
+            corrected=cc)

@@ -26,7 +26,18 @@ Scenarios are registered like schemes and strategies::
     DeploymentSpec(..., scenario="flaky")      # either engine, via deploy()
 
 Built-ins: ``calm``, ``shuffle``, ``crash``, ``correlated_slowdown``,
-``bursty``, ``hetero``, ``storm`` (everything at once).
+``bursty``, ``hetero``, ``byzantine`` (erroneous/corrupted responses —
+the ``CorruptOutputs`` hazard family), ``storm`` (everything at once).
+
+The ``byzantine`` family is a different fault *class* from the rest: a
+corrupt window does not (only) delay a response, it makes the response
+**wrong**.  The DES flags such responses natively (``FaultPlan.corrupts``)
+and lets a ``detects_errors`` coding scheme (approxifer) vote them out;
+the threaded runtime injects real numerical corruption through the
+``corrupt_fn`` adapter — the same window set the DES realizes — and the
+frontend's decode path does the voting on actual outputs.  Corrupted
+responses from the injector are garbage at ``CORRUPTION_SCALE``, matching
+ApproxIFER's adversarial model (gross errors, not subtle bias).
 
 All hazard times are in simulator milliseconds; the runtime adapter converts
 them to wall-clock seconds via ``time_scale`` (1.0 = one sim-ms per real ms).
@@ -50,6 +61,13 @@ MAIN_BASE = 0
 PARITY_BASE = 1000
 PARITY_STRIDE = 100
 BACKUP_BASE = 2000
+
+# What a Byzantine response is corrupted TO by the threaded runtime's fault
+# injector: garbage at a scale far above any real model output, far above
+# the approxifer decoder's voting tolerance (``err_tol``), so detection
+# exercises the gross-error adversarial model rather than hinging on
+# interpolation slack.
+CORRUPTION_SCALE = 1.0e3
 
 
 _MAX_PARITY_POOLS = (BACKUP_BASE - PARITY_BASE) // PARITY_STRIDE
@@ -101,6 +119,10 @@ class Window:
     ``until_restart`` models a crash: a query dispatched at ``now`` inside
     the window waits out the remaining downtime ``t1 - now`` before service
     starts. Otherwise service time becomes ``base * mult + U[add_lo, add_hi]``.
+    ``corrupt`` marks a Byzantine window: responses computed inside it are
+    erroneous (the delay knobs still apply — a failing node is typically
+    slow AND wrong, which is also what gives a voting decoder the surplus
+    of clean responses it needs).
     """
     pool: str
     server: int
@@ -110,6 +132,7 @@ class Window:
     add_lo: float = 0.0
     add_hi: float = 0.0
     until_restart: bool = False
+    corrupt: bool = False
 
 
 class FaultPlan:
@@ -132,6 +155,7 @@ class FaultPlan:
         self._cursor = {key: 0 for key in self._buckets}
         self.rates = rates
         self.n_windows = len(windows)
+        self.n_corrupt = sum(1 for w in windows if w.corrupt)
 
     def _active(self, pool, server, now):
         for key in ((pool, server), (pool, -1)):
@@ -173,6 +197,13 @@ class FaultPlan:
             else:
                 extra += rng.uniform(w.add_lo, w.add_hi)
         return extra
+
+    def corrupts(self, pool, server, now) -> bool:
+        """Byzantine hook, both engines: is a corrupt window active on
+        (pool, server) at ``now`` — i.e. is a response computed now
+        erroneous?  (Delay injection for these windows flows through the
+        two hooks above like any other window.)"""
+        return any(w.corrupt for w in self._active(pool, server, now))
 
 
 def _recurring(rng, horizon_ms, first, dur_rng, gap_rng):
@@ -299,6 +330,54 @@ class DeterministicSlowdown:
 
 
 @dataclass(frozen=True)
+class CorruptOutputs:
+    """Byzantine hazard: recurring per-server episodes during which every
+    response the server computes is erroneous (silent data corruption, a
+    wedged accelerator, an adversarial replica).  Episodes also add a
+    transfer-scale delay — a failing node is slow as well as wrong — which
+    is what lets a ``detects_errors`` scheme accumulate the surplus of
+    clean responses it needs to vote the garbage out.
+
+    Exponential time-between-episodes (``mtbe_ms``), uniform duration."""
+
+    pool: str = "main"
+    mtbe_ms: float = 6000.0
+    duration_ms: tuple = (150.0, 450.0)
+    delay_ms: tuple = (20.0, 60.0)
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        windows = []
+        for pool in _target_pools(self.pool, pool_sizes):
+            for s in range(pool_sizes[pool]):
+                t = rng.exponential(self.mtbe_ms)
+                while t <= horizon_ms:
+                    dur = rng.uniform(*self.duration_ms)
+                    windows.append(Window(pool, s, t, t + dur,
+                                          add_lo=self.delay_ms[0],
+                                          add_hi=self.delay_ms[1],
+                                          corrupt=True))
+                    t += dur + rng.exponential(self.mtbe_ms)
+        return windows, {}
+
+
+@dataclass(frozen=True)
+class DeterministicCorruption:
+    """Explicitly targeted Byzantine windows — the corrupt-output analogue
+    of ``DeterministicSlowdown``, for tests where both serving layers must
+    see the *same* erroneous responses."""
+
+    targets: tuple                    # of (pool, server)
+    t0: float = 0.0
+    t1: float = float("inf")
+    add_ms: float = 0.0
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [Window(pool, server, self.t0, self.t1,
+                       add_lo=self.add_ms, add_hi=self.add_ms, corrupt=True)
+                for pool, server in self.targets], {}
+
+
+@dataclass(frozen=True)
 class BurstyArrivals:
     """Two-state Markov-modulated Poisson process (MMPP): calm periods at
     the configured qps, bursts at ``burst_mult`` times it."""
@@ -353,15 +432,24 @@ class Scenario:
             rates.update(rt)
         return FaultPlan(windows, rates)
 
-    def delay_fn(self, pool_sizes: Dict[str, int], *, seed: int = 0,
+    def adapters(self, pool_sizes: Dict[str, int], *, seed: int = 0,
                  horizon_ms: float = 600_000.0, time_scale: float = 1.0,
                  extra=None):
-        """Fault-injecting ``delay_fn(iid) -> seconds`` for the threaded
-        ``ParMFrontend``: realizes the hazards once, then maps each worker's
-        instance id to its (pool, server) window set by wall-clock time.
-        ``extra`` composes with a user-provided delay_fn (delays add).
-        ``random.Random`` is used for per-query jitter — its single-call
-        draws are safe under CPython's GIL for concurrent workers."""
+        """Both threaded-runtime fault adapters off ONE realized plan and
+        one wall-clock origin: ``(delay_fn, corrupt_fn)``.
+
+        ``delay_fn(iid) -> seconds`` maps each worker's instance id to its
+        (pool, server) window set by wall-clock time; ``extra`` composes
+        with a user-provided delay_fn (delays add).  ``random.Random`` is
+        used for per-query jitter — its single-call draws are safe under
+        CPython's GIL for concurrent workers.
+
+        ``corrupt_fn(iid) -> bool`` is the Byzantine twin: True while a
+        corrupt window is active on the worker's (pool, server), reading
+        the SAME windows by the SAME clock (a separately-realized plan
+        would skew the two adapters by their setup gap).  It is ``None``
+        when the plan holds no corrupt windows, so frontends skip wiring
+        the output-corruption path — and its screening — entirely."""
         plan = self.realize(pool_sizes, horizon_ms,
                             np.random.default_rng(seed))
         jitter = _random.Random(seed + 1)
@@ -370,16 +458,35 @@ class Scenario:
         class _Jitter:                   # FaultPlan expects rng.uniform(a, b)
             uniform = staticmethod(jitter.uniform)
 
-        def fn(iid):
+        def now_ms():
+            return (time.perf_counter() - origin) * 1e3 / time_scale
+
+        def delay(iid):
             pool, server = pool_of_iid(iid)
-            now_ms = (time.perf_counter() - origin) * 1e3 / time_scale
-            d = plan.injected_delay_ms(pool, server, now_ms, _Jitter)
+            d = plan.injected_delay_ms(pool, server, now_ms(), _Jitter)
             d_s = d * time_scale / 1e3
             if extra is not None:
                 d_s += extra(iid)
             return d_s
 
-        return fn
+        if plan.n_corrupt == 0:
+            return delay, None
+
+        def corrupt(iid):
+            pool, server = pool_of_iid(iid)
+            return plan.corrupts(pool, server, now_ms())
+
+        return delay, corrupt
+
+    def delay_fn(self, pool_sizes: Dict[str, int], *, seed: int = 0,
+                 horizon_ms: float = 600_000.0, time_scale: float = 1.0,
+                 extra=None):
+        """The delay adapter alone (see ``adapters``).  There is
+        deliberately no standalone corrupt-adapter helper: the two
+        injectors must share one realized plan and one clock origin, so
+        callers that want both go through ``adapters``."""
+        return self.adapters(pool_sizes, seed=seed, horizon_ms=horizon_ms,
+                             time_scale=time_scale, extra=extra)[0]
 
 
 # --------------------------------------------------------------- registry ---
@@ -417,6 +524,7 @@ register_scenario(Scenario("bursty", (BurstyArrivals(),
                                       NetworkShuffles(n_tenants=2))))
 register_scenario(Scenario("hetero", (HeterogeneousRates(),
                                       NetworkShuffles(n_tenants=2))))
+register_scenario(Scenario("byzantine", (CorruptOutputs(),)))
 register_scenario(Scenario("storm", (NetworkShuffles(),
                                      InstanceCrash(mtbf_ms=40_000.0),
                                      CorrelatedSlowdown(),

@@ -35,7 +35,18 @@ objects (``repro.serving.scenarios``): ``simulate(cfg, strategy,
 scenario="crash")`` realizes the scenario's hazards — instance crash/restart,
 correlated pool slowdowns, bursty MMPP arrivals, heterogeneous service rates
 — into per-server slowdown windows.  With ``scenario=None`` the legacy
-cfg-driven shuffle process runs unchanged.
+cfg-driven shuffle process runs unchanged.  The ``byzantine`` hazard family
+(``CorruptOutputs``) is a different fault class: responses computed inside a
+corrupt window are *erroneous* rather than late.  For a ``detects_errors``
+scheme (approxifer) the DES re-runs a joint vote whenever a response
+touches a group: all corrupt responses the group holds are evicted
+together once ``n_held >= k + 2 * n_candidates`` (the classical 2e-surplus
+error-correction margin, the same one the frontend's numeric
+``flag_errors`` enforces) — caught in time, the affected query is served
+from a clean reconstruction; caught late, the garbage was already served
+and only the detection is recorded.  Counts surface as
+``ServingReport.corrupted_detected`` / ``corrected``.  Schemes without
+detection accept the garbage silently, with identical latency.
 
 This module is the **sim engine** behind the declarative serving surface in
 ``repro.serving.api``: ``deploy(spec, engine="sim").replay(trace)`` builds a
@@ -225,6 +236,19 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     done = np.zeros(n, bool)
     how = np.zeros(n, np.int8)              # 0 model | 1 parity | 2 default
     cancelled = {"q": 0, "p": 0}
+    # Byzantine bookkeeping (detects_errors schemes under corrupt-output
+    # hazards): responses voted out, and affected predictions served clean
+    detecting = strat.coded and getattr(schm, "detects_errors", False)
+    corrupted = {"detected": 0, "corrected": 0}
+    member_resp = np.zeros(n, bool)         # member responses the decoder
+                                            # currently holds (clean, or
+                                            # corrupt but not yet voted out)
+    corrupt_members = {}                    # gid -> set of qi: corrupt member
+                                            # responses held, not yet evicted
+    corrupt_parities = {}                   # gid -> set of j: likewise
+    corrupt_stash = {}                      # qi -> finish_t: voted-out member
+                                            # responses whose query is still
+                                            # unanswered
 
     # coding-group bookkeeping (coded strategies only); member availability
     # is read off ``done`` — a reconstructed member counts as available for
@@ -322,17 +346,63 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             latency[qi] = t - arrival_t[qi]
             how[qi] = by
 
+    def revote(g, t):
+        """Joint Byzantine vote over group ``g``'s held responses — the DES
+        mirror of ``ParMFrontend._screen``'s ``flag_errors`` call, re-run
+        whenever a response touches the group (the frontend re-votes on
+        every recorded arrival too, so an erroneous response accepted
+        early, below the margin, is still caught once later responses
+        provide the surplus).  All corrupt responses currently held are
+        candidates together, evicted iff
+
+            n_held  >=  k + 2 * n_candidates
+
+        (``n_held`` counts every response the decoder holds, candidates
+        included) — exactly the smallest-consistent-subset margin
+        ``flag_errors`` enforces, including its abstention when two
+        corruptions face only two surplus responses.  An evicted member
+        already answered from a clean reconstruction counts corrected;
+        one that answered its own query with the garbage is detected too
+        late to help; one still unanswered stays missing for
+        ``maybe_reconstruct`` (stashed so the end-of-run drain can serve
+        the suspect output if no clean decode ever lands)."""
+        cm = corrupt_members.get(g, ())
+        cp = corrupt_parities.get(g, ())
+        n_cand = len(cm) + len(cp)
+        if not n_cand:
+            return
+        base = g * gk
+        n_held = int(member_resp[base:base + gk].sum()) + \
+            int(np.isfinite(group_parity_t[g, :r]).sum())
+        if n_held < gk + 2 * n_cand:
+            return
+        corrupted["detected"] += n_cand
+        for qi in cm:
+            member_resp[qi] = False
+            if done[qi]:
+                if how[qi] == 1:
+                    corrupted["corrected"] += 1
+            else:
+                corrupt_stash[qi] = t
+        for j in cp:
+            group_parity_t[g, j] = np.inf
+        corrupt_members.pop(g, None)
+        corrupt_parities.pop(g, None)
+
     def maybe_reconstruct(g, t):
         """Reconstruct every member the scheme can recover *right now*: the
-        shared ``recoverable_rows`` rule over (members still unavailable,
-        parities arrived) — the exact decision ``ParMFrontend._maybe_decode``
-        takes, so the two layers agree on recoverability by construction."""
+        shared ``recoverable_rows`` rule over (members whose response the
+        decoder does not hold, parities arrived) — the exact decision
+        ``ParMFrontend._maybe_decode`` takes (its miss rule is "no
+        trustworthy response recorded", NOT "query unanswered": an SLO- or
+        eviction-answered member without a held response has no data to
+        decode with), so the two layers agree by construction."""
         base = g * gk
         if base + gk > n:
             return          # partial trailing group: the runtime never
                             # encodes one, so the DES doesn't decode one
-        miss = ~done[base:base + gk]
-        if not miss.any():
+        miss = ~member_resp[base:base + gk]
+        if not miss.any() or done[base:base + gk].all():
             return
         parity_avail = np.isfinite(group_parity_t[g, :r])
         if not parity_avail.any():
@@ -344,6 +414,11 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         for j in np.nonzero(rows)[0]:
             qi = base + int(j)
             complete(qi, max(ready, arrival_t[qi]), by=1)
+            if detecting and qi in corrupt_stash:
+                # a member whose own response was voted out as corrupted,
+                # now served from a clean reconstruction instead
+                corrupted["corrected"] += 1
+                corrupt_stash.pop(qi)
 
     while events:
         ev = heapq.heappop(events)
@@ -366,21 +441,50 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                 push(t + cfg.slo_ms, "slo", qi)
         elif ev.kind == "finish":
             pool_name, s, items = ev.payload
-            pools[pool_name].free.append(s)
+            pool = pools[pool_name]
+            pool.free.append(s)
+            # Byzantine injection: responses computed inside a corrupt
+            # window are erroneous (one flag per inference call — the
+            # threaded runtime corrupts per call too)
+            corrupt = pool.plan is not None and \
+                pool.plan.corrupts(pool_name, s, t)
             # complete EVERY item of the batch before any reconstruction
             # decision — mirroring the runtime's batch-atomic completion: a
             # decode must never treat a batch-mate as missing when its exact
-            # output arrived in the same inference call
+            # output arrived in the same inference call.  Corrupt member
+            # responses (detecting scheme) defer completion until after the
+            # vote: an immediately-evicted one must not answer its query
+            # with garbage
             touched = []
+            deferred = []
             for kind, idx in items:
                 if kind == "q":
+                    if corrupt and detecting:
+                        g = int(group_of[idx])
+                        member_resp[idx] = True
+                        corrupt_members.setdefault(g, set()).add(idx)
+                        deferred.append(idx)
+                        touched.append(g)
+                        continue
                     complete(idx, t)
                     if strat.coded:
+                        member_resp[idx] = True
                         touched.append(int(group_of[idx]))
                 else:  # parity output (g, j)
                     g, j = idx
                     group_parity_t[g, j] = min(group_parity_t[g, j], t)
+                    if corrupt and detecting:
+                        corrupt_parities.setdefault(
+                            int(g), set()).add(int(j))
                     touched.append(int(g))
+            for g in dict.fromkeys(touched):
+                revote(g, t)
+            for qi in deferred:
+                if not done[qi] and qi not in corrupt_stash:
+                    # the vote abstained (no surplus yet): the garbage is
+                    # accepted and served as if clean — silently wrong,
+                    # exactly what a non-detecting scheme always does
+                    complete(qi, t)
             for g in dict.fromkeys(touched):
                 maybe_reconstruct(g, t)
             dispatch(pool_name, t)
@@ -390,6 +494,14 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             complete(ev.payload, t, by=2)
         elif ev.kind == "shuffle":
             schedule_shuffle(t)
+
+    # detected-but-uncorrectable responses: the decoder knows they are
+    # erroneous but never held enough clean responses to re-decode, so the
+    # system serves the suspect output it received, at its actual finish
+    # time — the same immediate-fulfillment choice the threaded frontend
+    # makes when a flagged member is not recoverable
+    for qi, tf in corrupt_stash.items():
+        complete(qi, tf)
 
     lat = latency[np.isfinite(latency)]
     assert len(lat) == n, f"unanswered queries: {n - len(lat)}"
@@ -416,4 +528,6 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         cancelled_parities=cancelled["p"],
         batches=main.n_calls,
         mean_batch_size=(main.n_items / main.n_calls) if main.n_calls
-        else 1.0)
+        else 1.0,
+        corrupted_detected=corrupted["detected"],
+        corrected=corrupted["corrected"])

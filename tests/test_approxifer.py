@@ -1,0 +1,232 @@
+"""ApproxIFER-style rational-interpolation scheme ("approxifer"): node
+geometry, exactness of the dynamic-arity decoder on polynomial data, the
+Byzantine vote, the Pallas encode kernel, and the no-training pipeline.
+
+The differential battery (tests/test_differential.py) covers the serving
+layers; this file pins the scheme object itself.
+"""
+from itertools import combinations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approxifer import (ApproxIFERScheme, chebyshev_nodes,
+                                   lagrange_eval_matrix, split_nodes)
+from repro.core.scheme import get_scheme, recoverable_rows
+
+
+def _ideal(scheme, outs):
+    """Ideal parity outputs: the output trajectory is the degree-(k-1)
+    interpolant of the member outputs, sampled at the parity nodes — for a
+    linear deployed model that is exactly what the parity pool returns."""
+    return jnp.einsum("rk,k...->r...",
+                      jnp.asarray(scheme.coeffs, jnp.float32), outs)
+
+
+@pytest.mark.parametrize("k,r", [(2, 1), (2, 2), (3, 1), (3, 2), (4, 2),
+                                 (4, 3), (5, 1), (6, 2)])
+def test_nodes_distinct_and_coeffs_partition_unity(k, r):
+    """Member and parity nodes come off one combined Chebyshev grid (all
+    distinct, interleaved), and every encode row is a Lagrange-basis
+    evaluation — rows sum to 1 (partition of unity), so encoding a
+    constant group yields that constant."""
+    z, w = split_nodes(k, r)
+    nodes = np.concatenate([z, w])
+    assert len(np.unique(nodes)) == k + r
+    assert len(z) == k and len(w) == r
+    scheme = get_scheme("approxifer", k=k, r=r)
+    c = np.asarray(scheme.coeffs)
+    np.testing.assert_allclose(c.sum(axis=1), np.ones(r), atol=1e-5)
+    const = jnp.ones((k, 3))
+    np.testing.assert_allclose(np.asarray(scheme.encode(const)),
+                               np.ones((r, 3)), atol=1e-5)
+
+
+def test_lagrange_eval_matrix_interpolates():
+    nodes = chebyshev_nodes(5)
+    at = np.array([0.3, nodes[2], -0.9])
+    L = lagrange_eval_matrix(nodes, at)
+    # a degree-4 polynomial is reproduced exactly at every evaluation point
+    coef = np.array([0.5, -1.0, 2.0, 0.3, -0.7])
+    p = np.polynomial.polynomial.polyval(nodes, coef)
+    want = np.polynomial.polynomial.polyval(at, coef)
+    np.testing.assert_allclose(L @ p, want, atol=1e-10)
+    # hitting a node exactly returns that node's value (indicator row)
+    np.testing.assert_allclose(L[1], np.eye(5)[2], atol=1e-12)
+
+
+@pytest.mark.parametrize("k,r", [(2, 2), (3, 2), (4, 2), (4, 3)])
+def test_decode_adapts_to_any_arrival_pattern(k, r):
+    """Dynamic arity: for EVERY split of e <= r losses across members and
+    parities, the decoder reconstructs the missing members exactly from
+    whichever >= k responses arrived — one deployment, every pattern, no
+    retraining."""
+    scheme = get_scheme("approxifer", k=k, r=r)
+    rng = np.random.default_rng(7 * k + r)
+    outs = jnp.asarray(rng.normal(size=(k, 6)).astype(np.float32))
+    parity = _ideal(scheme, outs)
+    n = k + r
+    for e in range(1, r + 1):
+        for lost in combinations(range(n), e):
+            miss = np.zeros(k, bool)
+            pa = np.ones(r, bool)
+            for t in lost:
+                if t < k:
+                    miss[t] = True
+                else:
+                    pa[t - k] = False
+            assert recoverable_rows(scheme, miss, pa).sum() == miss.sum()
+            corrupted = jnp.where(jnp.asarray(miss)[:, None], 999.0, outs)
+            recon = np.asarray(scheme.decode(
+                parity * jnp.asarray(pa)[:, None], corrupted,
+                jnp.asarray(miss), jnp.asarray(pa)))
+            np.testing.assert_allclose(recon, np.asarray(outs), atol=5e-3,
+                                       err_msg=f"k={k} r={r} lost={lost}")
+
+
+def test_all_extra_responses_lost_still_decodes():
+    """e = 2 of r = 2 extra responses missing: with every member present
+    the decode is a no-op passthrough, and recoverable_rows correctly
+    reports nothing recoverable once a member is also missing (arrived <
+    k) — the deployment survives losing ALL its redundancy, with zero
+    retraining, because the originals are served uncoded."""
+    scheme = get_scheme("approxifer", k=2, r=2)
+    rng = np.random.default_rng(0)
+    outs = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    none = np.zeros(2, bool)
+    lost = np.zeros(2, bool)
+    recon = np.asarray(scheme.decode(jnp.zeros((2, 4)), outs,
+                                     jnp.asarray(none), jnp.asarray(lost)))
+    np.testing.assert_allclose(recon, np.asarray(outs), atol=1e-6)
+    miss = np.array([True, False])
+    assert not recoverable_rows(scheme, miss, lost).any()
+
+
+def test_decode_one_matches_decode_and_pallas():
+    for k in (2, 3, 4):
+        rng = np.random.default_rng(k)
+        outs = jnp.asarray(rng.normal(size=(k, 2, 6)).astype(np.float32))
+        jnp_s = get_scheme("approxifer", k=k, r=1)
+        pls_s = get_scheme("approxifer", k=k, r=1, backend="pallas")
+        parity = _ideal(jnp_s, outs)
+        for j in range(k):
+            want = np.asarray(outs[j])
+            a = np.asarray(jnp_s.decode_one(parity[0], outs, j))
+            b = np.asarray(pls_s.decode_one(parity[0], outs, j))
+            np.testing.assert_allclose(a, want, atol=5e-3)
+            np.testing.assert_allclose(b, want, atol=5e-3)
+
+
+@pytest.mark.parametrize("k,r,shape", [(2, 1, (3, 8)), (3, 2, (1, 4, 4, 1)),
+                                       (4, 2, (2, 130)), (2, 2, (9, 5))])
+def test_pallas_encode_matches_jnp(k, r, shape):
+    """The berrut_encoder kernel (one launch for all r rows) must agree
+    with the jnp reference over lane/sublane-unaligned shapes too."""
+    rng = np.random.default_rng(3 * k + r)
+    q = jnp.asarray(rng.normal(size=(k,) + shape).astype(np.float32))
+    a = np.asarray(get_scheme("approxifer", k=k, r=r).encode(q))
+    b = np.asarray(
+        get_scheme("approxifer", k=k, r=r, backend="pallas").encode(q))
+    assert b.shape == (r,) + shape
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_berrut_encode_op_unbatched_vector():
+    q = jnp.asarray(np.random.default_rng(0).normal(size=(3, 7))
+                    .astype(np.float32))
+    a = np.asarray(get_scheme("approxifer", k=3).encode(q))
+    b = np.asarray(get_scheme("approxifer", k=3, backend="pallas").encode(q))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ------------------------------------------------------- Byzantine voting --
+def test_flag_errors_votes_out_gross_member_corruption():
+    scheme = get_scheme("approxifer", k=2, r=2)
+    rng = np.random.default_rng(1)
+    outs = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    parity = np.asarray(_ideal(scheme, outs))
+    bad = np.asarray(outs).copy()
+    bad[1] += 1e3
+    mf, pf = scheme.flag_errors(bad, np.ones(2, bool), parity,
+                                np.ones(2, bool))
+    assert mf.tolist() == [False, True] and not pf.any()
+
+
+def test_flag_errors_votes_out_corrupt_parity():
+    scheme = get_scheme("approxifer", k=2, r=2)
+    rng = np.random.default_rng(2)
+    outs = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    parity = np.asarray(_ideal(scheme, outs)).copy()
+    parity[0] -= 1e3
+    mf, pf = scheme.flag_errors(np.asarray(outs), np.ones(2, bool), parity,
+                                np.ones(2, bool))
+    assert pf.tolist() == [True, False] and not mf.any()
+
+
+def test_flag_errors_abstains_without_surplus():
+    """k + 1 responses cannot localize an error (the 2e-surplus margin):
+    the vote must abstain rather than guess."""
+    scheme = get_scheme("approxifer", k=2, r=2)
+    rng = np.random.default_rng(3)
+    outs = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    parity = np.asarray(_ideal(scheme, outs))
+    bad = np.asarray(outs).copy()
+    bad[0] += 1e3
+    mf, pf = scheme.flag_errors(bad, np.ones(2, bool), parity,
+                                np.array([True, False]))
+    assert not mf.any() and not pf.any()
+
+
+def test_flag_errors_clean_group_untouched():
+    scheme = get_scheme("approxifer", k=3, r=2)
+    rng = np.random.default_rng(4)
+    outs = jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32))
+    parity = np.asarray(_ideal(scheme, outs))
+    mf, pf = scheme.flag_errors(np.asarray(outs), np.ones(3, bool), parity,
+                                np.ones(2, bool))
+    assert not mf.any() and not pf.any()
+
+
+def test_max_correctable_margin():
+    scheme = get_scheme("approxifer", k=4, r=3)
+    assert scheme.max_correctable(4) == 0      # no surplus
+    assert scheme.max_correctable(5) == 0      # 1 surplus: detect-only
+    assert scheme.max_correctable(6) == 1      # 2e = 2
+    assert scheme.max_correctable(7) == 1
+
+
+# ---------------------------------------------------- no-training pipeline --
+def test_train_parity_models_is_a_noop_for_model_agnostic_schemes():
+    """approxifer works with the *deployed* model: train_parity_models
+    returns r references to the deployed params and never trains."""
+    from repro.core.parity import train_parity_models
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+    x = rng.normal(size=(32, 6)).astype(np.float32)
+    pp, scheme = train_parity_models(
+        W, lambda p, xb: xb @ p, init_fn=None, x_train=x, k=2, r=2,
+        scheme="approxifer")
+    assert scheme.name == "approxifer" and len(pp) == 2
+    for p in pp:
+        assert p is W
+
+
+def test_registry_validation_and_bounds():
+    with pytest.raises(ValueError, match="k >= 2"):
+        ApproxIFERScheme(k=1)
+    with pytest.raises(ValueError, match="r must be"):
+        ApproxIFERScheme(k=2, r=0)
+    s = get_scheme("approxifer", k=3, r=2)
+    assert (s.k, s.r, s.name) == (3, 2, "approxifer")
+    with pytest.raises(ValueError, match="backend"):
+        ApproxIFERScheme(k=2, backend="cuda")
+
+
+def test_decode_cost_is_flat_and_encode_cost_linear():
+    """Scheme-owned DES hints: one refit serves all missing rows (flat in
+    n_missing), encode is one linear pass."""
+    from repro.core.scheme import decode_cost, encode_cost
+    s = get_scheme("approxifer", k=4, r=2)
+    assert decode_cost(s, 1) == decode_cost(s, 2) == 2.0
+    assert encode_cost(s) == 1.0

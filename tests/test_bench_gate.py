@@ -1,10 +1,13 @@
 """The CI bench-regression gate (benchmarks/regression_check.py): gating
 rules — only *_ms metrics gate, missing gated metrics fail, new metrics are
-informational — and the checked-in baseline staying in sync with the smoke
-set the bench job emits."""
+informational — exit codes and the $GITHUB_STEP_SUMMARY markdown rendering,
+and the checked-in baseline staying in sync with the smoke set the bench
+job emits."""
 import importlib.util
 import json
 import pathlib
+import subprocess
+import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
@@ -41,6 +44,74 @@ def test_gate_fails_on_missing_metric_and_reports_new_ones():
     assert any(r.startswith("z_p999_ms,NEW") for r in rows)
 
 
+def test_gate_exact_threshold_boundary_is_inclusive():
+    """ratio == 1 + threshold passes (<=); the first representable step
+    beyond it trips — the boundary must not drift with a refactor."""
+    base = {"x_p999_ms": 100.0}
+    _, failures = compare({"x_p999_ms": 125.0}, base, threshold=0.25)
+    assert not failures                         # exactly +25%: ok
+    _, failures = compare({"x_p999_ms": 125.00001}, base, threshold=0.25)
+    assert failures                             # one step past: trips
+
+
+def _run_gate(tmp_path, current, baseline, *args, env_extra=None):
+    import os
+    cur, base = tmp_path / "cur.json", tmp_path / "base.json"
+    for path, content in ((cur, current), (base, baseline)):
+        path.write_text(content if isinstance(content, str)
+                        else json.dumps({"metrics": content}))
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    # never inherit a real Actions summary file: the gate auto-appends to
+    # $GITHUB_STEP_SUMMARY, and these deliberate pass/regress runs must
+    # not write tables into the CI test job's own Summary tab
+    env.pop("GITHUB_STEP_SUMMARY", None)
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "regression_check.py"),
+         str(cur), str(base), *args],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_gate_exit_codes(tmp_path):
+    """0 = pass, 1 = regression, 2 = gate could not run (malformed or
+    missing input) — CI distinguishes 'bench regressed' from 'bench
+    broke'."""
+    ok = _run_gate(tmp_path, {"a_p999_ms": 10.0}, {"a_p999_ms": 10.0})
+    assert ok.returncode == 0, ok.stderr
+    trip = _run_gate(tmp_path, {"a_p999_ms": 20.0}, {"a_p999_ms": 10.0})
+    assert trip.returncode == 1
+    assert "BENCH REGRESSION" in trip.stderr
+    broken = _run_gate(tmp_path, "{not json", {"a_p999_ms": 10.0})
+    assert broken.returncode == 2
+    assert "malformed" in broken.stderr
+    # a metrics-less but valid JSON document is also "cannot run"
+    nokey = _run_gate(tmp_path, '{"foo": 1}', {"a_p999_ms": 10.0})
+    assert nokey.returncode == 2
+
+
+def test_gate_writes_markdown_step_summary(tmp_path):
+    """--markdown (and $GITHUB_STEP_SUMMARY) render the per-metric
+    baseline/current/delta table — regressions readable in the Actions
+    Summary tab without downloading artifacts."""
+    md = tmp_path / "summary.md"
+    res = _run_gate(tmp_path,
+                    {"a_p999_ms": 20.0, "b_median_ms": 5.0, "c_p99_ms": 1.0},
+                    {"a_p999_ms": 10.0, "b_median_ms": 5.0},
+                    "--markdown", str(md))
+    assert res.returncode == 1
+    text = md.read_text()
+    assert "| metric | baseline | current | delta % | status |" in text
+    assert "REGRESSED" in text and "+100.0%" in text
+    assert "`c_p99_ms`" in text and "new" in text
+    # the env-var path appends to the same file format
+    md2 = tmp_path / "gha.md"
+    res2 = _run_gate(tmp_path, {"a_p999_ms": 10.0}, {"a_p999_ms": 10.0},
+                     env_extra={"GITHUB_STEP_SUMMARY": str(md2)})
+    assert res2.returncode == 0
+    assert "Bench gate" in md2.read_text()
+
+
 def test_checked_in_baseline_matches_smoke_metric_set():
     """The baseline must cover exactly the metrics the smoke bench emits —
     a drifted baseline would silently un-gate part of the sweep.  (Values
@@ -57,6 +128,14 @@ def test_checked_in_baseline_matches_smoke_metric_set():
     assert "smoke_r2_correlated_p999_ms" in metrics
     for b in (1, 2, 4):
         assert f"smoke_batch{b}_p999_ms" in metrics, b
+    # the Byzantine trend: latency metrics gate, the detection/correction
+    # counters ride as informational accuracy signals
+    for scheme in ("approxifer", "sum"):
+        assert f"smoke_byzantine_{scheme}_p999_ms" in metrics, scheme
+        assert f"smoke_byzantine_{scheme}_corrupted_detected" in metrics
+        assert f"smoke_byzantine_{scheme}_corrected" in metrics
+    assert metrics["smoke_byzantine_approxifer_corrupted_detected"] > 0
+    assert metrics["smoke_byzantine_sum_corrupted_detected"] == 0
     assert all(isinstance(v, (int, float)) for v in metrics.values())
 
 

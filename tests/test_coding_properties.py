@@ -173,6 +173,53 @@ def test_every_registered_scheme_roundtrips_under_all_masks():
                             err_msg=f"{name} decode_one j={rows[0]}")
 
 
+def test_dynamic_arity_schemes_roundtrip_under_combined_loss_masks():
+    """Schemes whose recoverability is a response COUNT (``dynamic_arity``
+    — approxifer) must round-trip under EVERY split of e <= r losses
+    across members and parities together, not only member masks: one
+    deployment, any arrival pattern, same decoder.  Includes the e = r
+    all-extras-lost split, where decode degenerates to a passthrough of
+    the (complete) member outputs."""
+    from itertools import combinations
+
+    from repro.core.scheme import available_schemes, recoverable_rows
+
+    swept = 0
+    for name in available_schemes():
+        try:
+            scheme = get_scheme(name, k=3, r=2)
+        except ValueError:
+            continue
+        if not getattr(scheme, "dynamic_arity", False):
+            continue
+        swept += 1
+        k, r = scheme.k, scheme.r
+        rng = np.random.default_rng(5)
+        outs = jnp.asarray(rng.normal(size=(k, 4)).astype(np.float32))
+        parity = jnp.einsum("rk,k...->r...",
+                            jnp.asarray(scheme.coeffs, jnp.float32), outs)
+        for e in range(0, r + 1):
+            for lost in combinations(range(k + r), e):
+                mask = np.zeros(k, bool)
+                pa = np.ones(r, bool)
+                for t in lost:
+                    if t < k:
+                        mask[t] = True
+                    else:
+                        pa[t - k] = False
+                rec_rows = recoverable_rows(scheme, mask, pa)
+                assert rec_rows.sum() == mask.sum(), (name, lost)
+                corrupted = jnp.where(jnp.asarray(mask)[:, None], 999.0,
+                                      outs)
+                recon = np.asarray(scheme.decode(
+                    parity * jnp.asarray(pa)[:, None], corrupted,
+                    jnp.asarray(mask), jnp.asarray(pa)))
+                np.testing.assert_allclose(
+                    recon, np.asarray(outs), atol=5e-3,
+                    err_msg=f"{name} lost={lost}")
+    assert swept >= 1            # approxifer is registered
+
+
 def test_make_code_shim_warns_and_matches_scheme():
     """Legacy make_code() still works but deprecates toward get_scheme()."""
     with pytest.warns(DeprecationWarning):

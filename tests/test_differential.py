@@ -157,6 +157,19 @@ CODED_CASES = [
     ("learned", 2, 1, (0,), (), 1, True),
     ("learned", 2, 1, (0, 1), (), 1, False),
     ("learned", 2, 2, (0, 1), (), 2, True),
+    # approxifer: the rational-interpolation code with a dynamic-arity
+    # decoder — recoverability is a COUNT (arrived responses >= k), not a
+    # fixed mask rule, and the "parity model" is the deployed model itself
+    # (model_agnostic), so the linear battery model serves it exactly
+    ("approxifer", 2, 1, (0,), (), 1, True),
+    ("approxifer", 2, 1, (0, 1), (), 1, False),
+    # two concurrent stragglers decode from the two extra responses, with
+    # zero retraining
+    ("approxifer", 2, 2, (0, 1), (), 2, True),
+    ("approxifer", 3, 2, (0, 1), (), 2, True),
+    # one straggler + one lost extra response: k - 1 members + the
+    # surviving extra response still reach arity k
+    ("approxifer", 2, 2, (0,), (1,), 1, True),
     # approx_backup-as-a-scheme: k=1 groups mean EVERY query has a cheap
     # replica in flight; with all mains slowed past the backup's service
     # time, both layers answer every query from the backup pool ("parity")
@@ -255,6 +268,115 @@ def test_redundant_work_cancellation_matches_across_engines(
         assert rep["cancelled_parities"] == exp_cp, (label, rep)
         assert rep["reconstructions"] == exp_recon, (label, rep)
     assert sim["completed_by"].keys() == rt["completed_by"].keys()
+
+
+def test_approxifer_survives_loss_of_all_extra_responses():
+    """e = 2 of r = 2 extra responses lost (both parity pools straggle):
+    every query is still answered exactly from the uncoded originals, no
+    reconstruction happens, and BOTH engines agree — the deployment
+    tolerates losing ALL its redundancy with zero retraining."""
+    scen = _pattern_scenario(2, (), (0, 1))
+    spec, W = _make_spec("approxifer", 2, 2, scen)
+    sim = _run_sim(spec, n=2)
+    rt = _run_runtime(spec, W, n=2)
+    for rep in (sim, rt):
+        assert rep["reconstructions"] == 0, rep
+        assert rep["completed_by"] == {"model": 2}, rep
+    assert sim["p999_ms"] < MEMBER_MS, sim
+
+
+def test_byzantine_detection_matches_across_engines():
+    """Deterministic Byzantine pattern through BOTH engines: main server 1
+    is corrupt and slow, so by the time its garbage arrives the group holds
+    1 clean member + 2 extra responses — surplus enough to vote it out.
+    The affected query was already served from a clean reconstruction, so
+    both engines report detected = corrected = 1, and the threads engine's
+    answers are all exact (the reconstruction replaced real numerical
+    garbage at CORRUPTION_SCALE)."""
+    from repro.serving.scenarios import DeterministicCorruption
+    # ordering the test depends on, with wide margins so load-skewed
+    # thread scheduling cannot reorder it: clean member (50 ms) << extra
+    # responses (300 ms) << corrupt member (700 ms)
+    scen = Scenario(
+        "diff-byzantine",
+        (DeterministicCorruption(targets=(("main", 1),), add_ms=MEMBER_MS),
+         # keep the clean main busy ~50 ms so each worker deterministically
+         # takes one member (the DES free-list assignment)
+         DeterministicSlowdown(targets=(("main", 0),), add_ms=50.0),
+         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0)),
+                               add_ms=300.0)))
+    spec, W = _make_spec("approxifer", 2, 2, scen)
+    sim = _run_sim(spec, n=2)
+    rt = _run_runtime(spec, W, n=2)
+    for rep in (sim, rt):
+        assert rep["corrupted_detected"] == 1, rep
+        assert rep["corrected"] == 1, rep
+        assert rep["reconstructions"] == 1, rep
+        assert rep["completed_by"] == {"model": 1, "parity": 1}, rep
+
+
+def test_byzantine_late_detection_matches_across_engines():
+    """The opposite ordering: the garbage arrives FIRST, while the group
+    has no voting surplus, so both engines accept and serve it (silently
+    wrong); when the extra responses land, the re-vote catches it — too
+    late to correct.  Both engines must agree: detected = 1, corrected =
+    0, and no reconstruction (the evicted member's query was already
+    answered by its own garbage)."""
+    from repro.serving.scenarios import DeterministicCorruption
+    scen = Scenario(
+        "diff-byzantine-late",
+        # both mains busy ~30 ms (so each deterministically takes one
+        # member, like the DES free-list); the extra responses arrive
+        # 500 ms — far — AFTER the corrupt one, so even under load-skewed
+        # scheduling the vote can only fire retroactively
+        (DeterministicCorruption(targets=(("main", 1),), add_ms=30.0),
+         DeterministicSlowdown(targets=(("main", 0),), add_ms=30.0),
+         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0)),
+                               add_ms=500.0)))
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    spec = DeploymentSpec(fwd=_linear_fwd, params=W, parity_params=[W, W],
+                          strategy="parm", scheme="approxifer", k=2, r=2,
+                          m=2, scenario=scen)
+    sim = _run_sim(spec, n=2)
+    # threads engine by hand: one of the two answers IS the garbage, so
+    # _run_runtime's exactness assertion does not apply here
+    sess = deploy(spec, engine="threads")
+    try:
+        if sess.frontend.strategy.coded:
+            sess.frontend.encode_fn(np.zeros((2, 1, 8), np.float32))
+        for _ in range(2):
+            sess.submit(rng.normal(size=(1, 8)).astype(np.float32))
+        assert sess.wait_all(timeout=30)
+        # the queries are answered (with the garbage) long before the
+        # extra responses land and the re-vote fires: poll, don't sleep
+        import time as _time
+        deadline = _time.time() + 15.0
+        while sess.stats()["corrupted_detected"] == 0 and \
+                _time.time() < deadline:
+            _time.sleep(0.02)
+    finally:
+        sess.shutdown()
+    rt = sess.stats()
+    for rep in (sim, rt):
+        assert rep["corrupted_detected"] == 1, rep
+        assert rep["corrected"] == 0, rep
+        assert rep["reconstructions"] == 0, rep
+        assert rep["completed_by"] == {"model": 2}, rep
+
+
+def test_byzantine_silent_for_non_detecting_schemes():
+    """The same corrupt window under ``sum``: no detection machinery runs,
+    the reports stay at zero, and latency accounting is unaffected (a
+    corrupt response completes like any other)."""
+    from repro.serving.scenarios import DeterministicCorruption
+    scen = Scenario(
+        "diff-byzantine-sum",
+        (DeterministicCorruption(targets=(("main", 1),)),))
+    spec, W = _make_spec("sum", 2, 1, scen)
+    sim = _run_sim(spec, n=2)
+    assert sim["corrupted_detected"] == 0 and sim["corrected"] == 0
+    assert sim["n"] == 2
 
 
 def test_batching_policy_flows_through_both_engines():
