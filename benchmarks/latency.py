@@ -183,6 +183,37 @@ def bench_scheme_tails(schemes=None):
         _row(f"scheme_{scheme}", res, extra=f"recon={res['reconstructions']}")
 
 
+def bench_adaptive_controller():
+    """Closed-loop adaptive redundancy: a ``threshold`` controller watching
+    live ``ReportWindow`` signals escalates sum/r=1 to approxifer/r=2 (plus
+    batching) for the duration of a fault episode, then settles back.  On
+    episodic scenarios it beats every static (scheme, r) point on the
+    p999-vs-parity-resource frontier: lower tail than static r=1 AND fewer
+    parity queries served than static r=2."""
+    for scen in ("bursty", "storm"):
+        grid = {}
+        for tag, scheme, r, ctl in (("adaptive", None, 1, "threshold"),
+                                    ("static_sum_r1", None, 1, None),
+                                    ("static_sum_r2", "sum", 2, None),
+                                    ("static_apx_r2", "approxifer", 2, None)):
+            res = simulate(SimConfig(n_queries=SMOKE_NQ, qps=270, m=12, k=2,
+                                     r=r, seed=1),
+                           "parm", scheme=scheme, scenario=scen,
+                           controller=ctl)
+            grid[tag] = res
+            print(f"ctl_{scen}_{tag}_p999_ms,{res['p999_ms']:.2f},"
+                  f"parity_served={res.parity_served} "
+                  f"adjustments={len(res.adjustments)}")
+        adp = grid["adaptive"]
+        dominated = all(adp["p999_ms"] < grid[t]["p999_ms"]
+                        for t in grid if t != "adaptive")
+        frugal = adp.parity_served < grid["static_sum_r2"].parity_served
+        print(f"ctl_{scen}_frontier_dominant,"
+              f"{dominated and frugal},"
+              f"tail_beats_all_statics={dominated} "
+              f"cheaper_than_r2={frugal}")
+
+
 SMOKE_NQ = 8000      # smoke-set size; recorded in the JSON the gate reads
 
 
@@ -235,6 +266,20 @@ def bench_ci_smoke():
         out[f"smoke_byzantine_{scheme}_corrupted_detected"] = \
             res["corrupted_detected"]
         out[f"smoke_byzantine_{scheme}_corrected"] = res["corrected"]
+    # adaptive-redundancy controller vs the static frontier (the gated
+    # *_ms pair locks the dominance ordering: adaptive p999 must stay
+    # under the static r=1 p999 on both episodic scenarios; parity_served
+    # counters are the resource side, informational)
+    for scen in ("bursty", "storm"):
+        for tag, ctl in (("adaptive", "threshold"), ("static_r1", None)):
+            res = simulate(SimConfig(n_queries=n, qps=270, m=12, k=2,
+                                     seed=1),
+                           "parm", scenario=scen, controller=ctl)
+            put(f"smoke_{tag}_{scen}", res)
+            out[f"smoke_{tag}_{scen}_parity_served"] = res.parity_served
+            if ctl is not None:
+                out[f"smoke_{tag}_{scen}_adjustments"] = \
+                    len(res.adjustments)
     for name, value in sorted(out.items()):
         print(f"{name},{value},ci_smoke")
     return out
@@ -244,7 +289,7 @@ ALL = [bench_fig11_latency_vs_qps, bench_fig12_vary_k,
        bench_fig13_network_imbalance, bench_fig14_light_multitenancy,
        bench_fig15_approx_backup, bench_sec525_encode_decode_latency,
        bench_batching, bench_adaptive_batching, bench_r2_multi_straggler,
-       bench_scenarios, bench_scheme_tails]
+       bench_scenarios, bench_scheme_tails, bench_adaptive_controller]
 
 
 def main():

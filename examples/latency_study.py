@@ -12,11 +12,16 @@ background network-shuffle load runs.  ``--scheme`` / ``--r`` select the code
 served by the coded strategies — any registered name, including ``learned``
 and ``approx_backup`` (§3.5, DESIGN.md §7).  ``--batch-size`` sweeps the
 adaptive ``BatchingPolicy`` through the DES's per-batch service-time curve.
+``--controller`` closes the loop: a registered adaptive-redundancy
+controller (DESIGN.md §10) retunes scheme, r, and batching from live
+``ReportWindow`` signals — pair it with an episodic ``--scenario`` such as
+``bursty`` to watch the escalation/settle cycle in the adjustment log.
 """
 import argparse
 
 from repro.core.scheme import available_schemes
 from repro.serving.api import BatchingPolicy, DeploymentSpec, Trace, deploy
+from repro.serving.controller import available_controllers
 from repro.serving.scenarios import available_scenarios
 
 
@@ -36,6 +41,11 @@ def main():
                     help="fault scenario (default: legacy shuffle load)")
     ap.add_argument("--batch-size", type=int, default=1,
                     help="adaptive-batching max batch size (main pool)")
+    ap.add_argument("--controller", default=None,
+                    choices=available_controllers(),
+                    help="closed-loop adaptive-redundancy controller "
+                         "(coded strategies retune scheme/r/batching from "
+                         "live ReportWindow signals)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for CI subprocess dryruns: exercise "
                          "the full strategy sweep in seconds")
@@ -45,10 +55,11 @@ def main():
 
     trace = Trace(n_queries=args.n, qps=args.qps)
     load = args.scenario or "background network shuffles"
+    ctl = f", controller: {args.controller}" if args.controller else ""
     print(f"m={args.m} deployed instances, k={args.k} "
           f"({1/args.k:.0%} redundancy), r={args.r}, {args.qps} qps, "
           f"{args.n} queries, load: {load}, "
-          f"batching max_size={args.batch_size}\n")
+          f"batching max_size={args.batch_size}{ctl}\n")
     print(f"{'strategy':18s} {'scheme':12s} {'median':>8s} {'p99':>8s} "
           f"{'p99.9':>8s} {'gap':>8s} {'recon':>7s} {'cancel':>7s}")
     for strat in ("none", "equal_resources", "parm", "approx_backup",
@@ -56,13 +67,19 @@ def main():
         spec = DeploymentSpec(
             strategy=strat, scheme=args.scheme, k=args.k, r=args.r,
             m=args.m, scenario=args.scenario,
-            batching=BatchingPolicy(max_size=args.batch_size))
+            batching=BatchingPolicy(max_size=args.batch_size),
+            controller=args.controller)
         r = deploy(spec, engine="sim").replay(trace)
         gap = r["p999_ms"] - r["median_ms"]
         print(f"{strat:18s} {str(r['scheme']):12s} "
               f"{r['median_ms']:7.1f}ms {r['p99_ms']:7.1f}ms "
               f"{r['p999_ms']:7.1f}ms {gap:7.1f}ms "
               f"{r['reconstructions']:7d} {r.cancellations:7d}")
+        if args.controller and r.adjustments:
+            log = " ".join(
+                f"w{w}->({s},r={rr},b={b})" for w, s, rr, b in r.adjustments)
+            print(f"{'':18s} adjustments: {log} "
+                  f"(parity_served={r.parity_served})")
 
 
 if __name__ == "__main__":

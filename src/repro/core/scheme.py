@@ -394,8 +394,15 @@ def register_scheme(name: str, factory: Callable[..., CodingScheme] = None,
     return _register(factory)
 
 
-def available_schemes():
+def list_schemes() -> list:
+    """Introspection: registered scheme names, sorted.  Controllers and
+    sweeps enumerate candidate actions through this; every listed name
+    resolves via ``get_scheme(name, k=...)``."""
     return sorted(_SCHEMES)
+
+
+def available_schemes():
+    return list_schemes()
 
 
 def get_scheme(scheme, k=None, r=None, *, backend=None, **kw) -> CodingScheme:

@@ -105,6 +105,11 @@ class DeploymentSpec:
     batching: BatchingPolicy = field(default_factory=BatchingPolicy)
     slo_ms: Optional[float] = None
     default_prediction: Any = None
+    # closed-loop retuning: a registered controller name or instance
+    # (repro.serving.controller).  Both engines observe ReportWindow
+    # snapshots every controller.window_ms and apply its Adjustments at
+    # coding-group boundaries; None (the default) disables the loop
+    controller: Union[str, Any, None] = None
 
     # fault injection.  ``scenario`` drives BOTH engines; the three knobs
     # below configure the threads engine's wall-clock fault-injection
@@ -323,7 +328,8 @@ class SimSession(Session):
             slo_ms=spec.slo_ms,
             batch_max_size=spec.batching.max_size)
         self._last = simulate(cfg, spec.strategy, scheme=spec.scheme,
-                              scenario=spec.scenario, backend=spec.backend)
+                              scenario=spec.scenario, backend=spec.backend,
+                              controller=spec.controller)
         return self._last
 
     def submit(self, x, qid=None) -> PredictionFuture:

@@ -21,7 +21,18 @@ New in this report (vs the old dicts):
   responses a ``detects_errors`` scheme (approxifer) voted out, and how
   many of the affected predictions were nonetheless served from a clean
   reconstruction.  Both default to 0, so report consumers and schemes that
-  never inject or detect errors are unaffected.
+  never inject or detect errors are unaffected;
+* ``controller`` / ``windows`` / ``adjustments`` / ``parity_served`` —
+  closed-loop bookkeeping (``repro.serving.controller``): which controller
+  watched the run, how many ``ReportWindow`` snapshots it observed, the
+  ``(window, scheme, r, batch_max_size)`` adjustment log it produced, and
+  how many parity-pool inference items the run actually served (the
+  resource axis of the adaptive-vs-static frontier).
+
+``ReportWindow`` is the *incremental* snapshot the same two engines hand a
+``Controller`` every ``window_ms``: per-window p50/p999 plus the straggler /
+corruption / cancellation rates, all guarded by ``_safe_rate`` so a window
+that closes with zero completed queries reports 0.0 rates instead of raising.
 """
 
 from __future__ import annotations
@@ -29,6 +40,70 @@ from __future__ import annotations
 from collections.abc import Mapping
 from dataclasses import dataclass, field, fields
 from typing import Dict, Optional
+
+import numpy as np
+
+
+def _safe_rate(num, den) -> float:
+    """``num / den`` with the empty-window guard both report types share:
+    zero completions means "no evidence", reported as a 0.0 rate — never a
+    ZeroDivisionError out of a quiet window."""
+    return float(num) / float(den) if den else 0.0
+
+
+@dataclass(frozen=True, eq=True)
+class ReportWindow:
+    """One closed observation window of a serving run.
+
+    The sliding-window counterpart of ``ServingReport``: both engines close
+    one every ``Controller.window_ms`` (simulated ms in the DES, scaled
+    wall-clock in the threads engine) and hand it to
+    ``Controller.observe``.  ``n`` counts queries *completed* inside
+    [``t0_ms``, ``t1_ms``); the rates are relative to it, empty-window safe
+    via ``_safe_rate``.
+    """
+
+    index: int = 0
+    t0_ms: float = 0.0
+    t1_ms: float = 0.0
+    n: int = 0
+    p50_ms: float = float("nan")
+    p999_ms: float = float("nan")
+    reconstructions: int = 0
+    corrupted_detected: int = 0
+    cancellations: int = 0
+
+    @property
+    def straggler_rate(self) -> float:
+        """Fraction of this window's completions served by a parity
+        reconstruction — i.e. whose original was unavailable in time."""
+        return _safe_rate(self.reconstructions, self.n)
+
+    @property
+    def corruption_rate(self) -> float:
+        return _safe_rate(self.corrupted_detected, self.n)
+
+    @property
+    def cancellation_rate(self) -> float:
+        return _safe_rate(self.cancellations, self.n)
+
+
+def build_window(index, t0_ms, t1_ms, records, *, corrupted_detected=0,
+                 cancellations=0) -> ReportWindow:
+    """Assemble a ``ReportWindow`` from per-completion records — the one
+    construction path both engines share, so their window semantics cannot
+    drift.  ``records`` is a sequence of ``(latency_ms, is_reconstruction)``
+    pairs for queries completed inside the window; the counter deltas are
+    per-window (not cumulative)."""
+    n = len(records)
+    lats = np.asarray([rec[0] for rec in records], dtype=float)
+    return ReportWindow(
+        index=int(index), t0_ms=float(t0_ms), t1_ms=float(t1_ms), n=n,
+        p50_ms=float(np.percentile(lats, 50)) if n else float("nan"),
+        p999_ms=float(np.percentile(lats, 99.9)) if n else float("nan"),
+        reconstructions=sum(1 for rec in records if rec[1]),
+        corrupted_detected=int(corrupted_detected),
+        cancellations=int(cancellations))
 
 
 @dataclass(frozen=True, eq=True)
@@ -60,14 +135,23 @@ class ServingReport(Mapping):
     mean_batch_size: float = 1.0
     corrupted_detected: int = 0
     corrected: int = 0
+    # closed-loop bookkeeping (repro.serving.controller); all defaulted, so
+    # controller-less runs are unaffected
+    controller: Optional[str] = None
+    windows: int = 0
+    adjustments: tuple = ()     # of (window_index, scheme, r, batch_max_size)
+    parity_served: int = 0      # parity-pool inference items actually served
 
     # -- Mapping protocol: old ``stats()["p999_ms"]`` call sites keep
     # working.  The view is exactly the dataclass fields plus the derived
-    # ``cancellations`` total — NOT arbitrary attributes, so methods are
-    # not "in" the report and ``dict(report)`` round-trips every readable
-    # key (including the one the examples read as ``stats["cancellations"]``)
+    # ``cancellations`` total and the three rates — NOT arbitrary
+    # attributes, so methods are not "in" the report and ``dict(report)``
+    # round-trips every readable key (including the one the examples read
+    # as ``stats["cancellations"]``)
     def _key_names(self):
-        return [f.name for f in fields(self)] + ["cancellations"]
+        return [f.name for f in fields(self)] + [
+            "cancellations", "straggler_rate", "corruption_rate",
+            "cancellation_rate"]
 
     def __getitem__(self, key):
         if key in self._key_names():
@@ -84,6 +168,22 @@ class ServingReport(Mapping):
     def cancellations(self) -> int:
         """Total redundant work skipped at dequeue, both directions."""
         return self.cancelled_queries + self.cancelled_parities
+
+    # whole-run rates, sharing ReportWindow's empty-window guard: a report
+    # over zero completed queries (n == 0) yields 0.0, never a
+    # ZeroDivisionError
+    @property
+    def straggler_rate(self) -> float:
+        """Fraction of completions served by a parity reconstruction."""
+        return _safe_rate(self.reconstructions, self.n)
+
+    @property
+    def corruption_rate(self) -> float:
+        return _safe_rate(self.corrupted_detected, self.n)
+
+    @property
+    def cancellation_rate(self) -> float:
+        return _safe_rate(self.cancellations, self.n)
 
     def summary(self) -> str:
         """One human-readable line (examples, launchers)."""

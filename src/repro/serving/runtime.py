@@ -35,7 +35,19 @@ are properties of the *frontend*, not of the code:
   ``detects_errors`` scheme (approxifer) votes recorded responses out via
   ``flag_errors`` whenever the group holds surplus responses — evicted
   responses never answer their query nor enter a decode; counts surface as
-  ``ServingReport.corrupted_detected`` / ``corrected``.
+  ``ServingReport.corrupted_detected`` / ``corrected``;
+* **closed-loop adaptation** (``DeploymentSpec.controller``): a registered
+  ``Controller`` (``serving/controller.py``) observes fixed-length windows of
+  the live signals (ticked at the top of ``submit`` on the scenario clock,
+  trailing windows closed at shutdown) and emits ``Adjustment``s that retune
+  scheme / r / batch size.  Adjustments land at the next coding-group
+  boundary; in-flight groups keep the scheme/r they captured at assembly, so
+  nothing is dropped mid-decode.  Parity pools are provisioned up front for
+  ``Controller.max_r`` — pools beyond the deployment's own ``parity_params``
+  run the *deployed* parameters (correct for a ``model_agnostic`` escalation
+  target like ``approxifer``) — and idle until an escalation dispatches to
+  them.  The adjustment log uses the same tuples the DES records, so the
+  differential battery compares decision sequences verbatim.
 
 Used by the end-to-end example (examples/serve_parm.py) and integration tests;
 the 100k-query tail studies use the DES in ``repro.serving.simulator``.
@@ -46,7 +58,7 @@ import queue
 import threading
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -54,7 +66,8 @@ import numpy as np
 
 from repro.core.scheme import get_scheme, recoverable_rows
 from repro.serving.api import BatchingPolicy, DeploymentSpec
-from repro.serving.report import ServingReport
+from repro.serving.controller import Adjustment, get_controller
+from repro.serving.report import ServingReport, build_window
 from repro.serving.scenarios import (CORRUPTION_SCALE, get_scenario,
                                      instance_id)
 from repro.serving.strategy import get_strategy
@@ -344,6 +357,15 @@ class ParMFrontend:
         self.r = self.scheme.r if self.strategy.coded else \
             (1 if spec.r is None else spec.r)
         self.batching = spec.batching
+        self._controller = None if spec.controller is None else \
+            get_controller(spec.controller)
+        # parity pools exist from construction for the controller's r
+        # ceiling: worker threads cannot be spawned (and JAX re-warmed)
+        # mid-run, so escalation targets idle pools provisioned up front
+        self.r_pools = self.r
+        if self._controller is not None and self.strategy.coded:
+            self.r_pools = max(self.r, int(self._controller.max_r(self.r)))
+        self._user_encode = spec.encode_fn
         self.encode_fn = spec.encode_fn or (
             lambda q: np.asarray(self.scheme.encode(q)))
         self.decode_fn = spec.decode_fn
@@ -370,6 +392,19 @@ class ParMFrontend:
         self._detecting = False
         self.corrupted_detected = 0
         self.corrupted_corrected = 0
+        # controller bookkeeping: the window clock runs in *scenario* ms
+        # (wall-clock since construction divided by scenario_time_scale),
+        # ticked at the top of submit() and drained at shutdown
+        self._origin = time.perf_counter()
+        self._adjust_log = []
+        self._pending_adj = None        # (Adjustment, window_index) deferred
+                                        # to the next group boundary
+        self._window_idx = 0
+        self._window_counted = set()    # qids already bucketed in a window
+        self._ctl_prev = {"detected": 0, "cancel": 0}
+        self._last_submit_ms = 0.0
+        self._ctl_state = None
+        self.parity_served = 0          # parity inference items served
 
         layout = self.strategy.layout(m, k, self.r)
         scenario = spec.scenario
@@ -386,7 +421,7 @@ class ParMFrontend:
             self.scenario = get_scenario(scenario)
             pool_sizes = {"main": layout.main}
             if self.strategy.coded and layout.parity:
-                for j in range(self.r):
+                for j in range(self.r_pools):
                     pool_sizes[f"parity{j}"] = layout.parity
             delay_fn, corrupt_fn = self.scenario.adapters(
                 pool_sizes, seed=spec.scenario_seed,
@@ -396,12 +431,19 @@ class ParMFrontend:
         # arrival once a group holds surplus responses — only pay it when
         # corruption can actually exist (the DES gates its revote on a
         # non-empty candidate set the same way)
+        self._corrupting = corrupt_fn is not None
         self._detecting = self.strategy.coded and \
             getattr(self.scheme, "detects_errors", False) and \
             corrupt_fn is not None
         self.main_q = queue.Queue()
         self.workers = []
-        main_batching = self.batching if self.batching.max_size > 1 else None
+        self._main_workers = []
+        # a controller may retune max_size at runtime, so its main workers
+        # always carry the (rebindable) policy object; run() re-reads
+        # max_size every dequeue, so a max_size=1 policy batches nothing
+        main_batching = self.batching if (
+            self.batching.max_size > 1
+            or self._controller is not None) else None
         for i in range(layout.main):
             w = ModelInstance(instance_id("main", i), self.main_q, fwd,
                               spec.params, self._on_model_done, delay_fn,
@@ -412,6 +454,7 @@ class ParMFrontend:
                               corrupt_fn=corrupt_fn)
             w.start()
             self.workers.append(w)
+            self._main_workers.append(w)
         if self.strategy.coded:
             parity_params = spec.parity_params
             if parity_params is None:
@@ -422,8 +465,14 @@ class ParMFrontend:
                 parity_params = [parity_params]
             assert len(parity_params) == self.r, \
                 (len(parity_params), self.r)
+            # controller-provisioned pools beyond the deployment's own
+            # parity models run the DEPLOYED parameters: the escalation
+            # target is model_agnostic (its parity input is a combination
+            # of plain queries), so the deployed model IS its parity model
+            parity_params = list(parity_params) + \
+                [spec.params] * (self.r_pools - len(parity_params))
             self.parity_qs = []
-            for j in range(self.r):
+            for j in range(self.r_pools):
                 pq = queue.Queue()
                 self.parity_qs.append(pq)
                 for i in range(layout.parity):
@@ -436,11 +485,104 @@ class ParMFrontend:
                     w.start()
                     self.workers.append(w)
             self.parity_q = self.parity_qs[0]      # back-compat alias
+        if self._controller is not None:
+            # the base the controller's de-escalation returns to: the
+            # deployment's own knobs (same construction as the DES)
+            self._ctl_state = self._controller.init(Adjustment(
+                scheme=self.scheme.name if self.strategy.coded else None,
+                r=self.r if self.strategy.coded else None,
+                batch_max_size=self.batching.max_size))
+
+    # ----------------------------------------------------- controller ---
+    def _ctl_tick(self, now):
+        """Advance the window clock to ``now`` (wall-clock seconds),
+        closing every observation window that has fully elapsed.  Runs at
+        the top of ``submit`` — the same clock edge the DES models by
+        sorting its ctl events ahead of same-time arrivals."""
+        ts = self.spec.scenario_time_scale
+        now_ms = (now - self._origin) * 1e3 / ts
+        self._last_submit_ms = max(self._last_submit_ms, now_ms)
+        wlen = float(self._controller.window_ms)
+        while (self._window_idx + 1) * wlen <= now_ms:
+            self._close_window()
+
+    def _close_window(self):
+        """Close window ``[widx*wlen, (widx+1)*wlen)``: bucket completions
+        by completion timestamp (scenario ms), counters by per-window
+        delta, hand the window to the controller, and apply its adjustment
+        — immediately when no group is assembling, else deferred to the
+        next group boundary.  Latencies are reported in scenario ms so
+        controller thresholds mean the same thing on both engines."""
+        ctl = self._controller
+        ts = self.spec.scenario_time_scale
+        wlen = float(ctl.window_ms)
+        widx = self._window_idx
+        t1 = (widx + 1) * wlen
+        with self.lock:
+            recs = []
+            for qid, q in self.queries.items():
+                if qid in self._window_counted or not q.event.is_set() \
+                        or q.completed_by == "flushed":
+                    continue
+                fin_ms = (q.finish - self._origin) * 1e3 / ts
+                if fin_ms < t1:
+                    self._window_counted.add(qid)
+                    recs.append((q.latency_ms / ts,
+                                 q.completed_by == "parity"))
+            cancel = self.cancelled_queries + self.cancelled_parities
+            win = build_window(
+                widx, widx * wlen, t1, recs,
+                corrupted_detected=self.corrupted_detected
+                - self._ctl_prev["detected"],
+                cancellations=cancel - self._ctl_prev["cancel"])
+            self._ctl_prev["detected"] = self.corrupted_detected
+            self._ctl_prev["cancel"] = cancel
+            adj, self._ctl_state = ctl.observe(self._ctl_state, win)
+            self._window_idx = widx + 1
+            if adj is not None:
+                if self._pending_group:
+                    self._pending_adj = (adj, widx)
+                else:
+                    self._apply_adjustment(adj, widx)
+
+    def _apply_adjustment(self, adj, widx):
+        """Lock held.  Retune the CURRENT knobs; in-flight groups keep the
+        scheme/r/det they captured at assembly.  Scheme/r apply only to
+        coded strategies; batching to any.  The log records the
+        post-adjustment knobs — the identical tuples the DES appends, so
+        the differential battery compares decision sequences verbatim."""
+        if self.strategy.coded and (adj.scheme is not None
+                                    or adj.r is not None):
+            name = adj.scheme if adj.scheme is not None \
+                else self.scheme.name
+            want_r = adj.r if adj.r is not None else self.r
+            new = get_scheme(name, k=self.k, r=want_r,
+                             backend=self.spec.backend)
+            if new.r > self.r_pools:
+                raise ValueError(
+                    f"controller adjustment needs r={new.r} parity pools "
+                    f"but only {self.r_pools} were provisioned — raise "
+                    f"Controller.max_r")
+            self.scheme, self.r, self.group_k = new, new.r, new.k
+            self._detecting = getattr(new, "detects_errors", False) and \
+                self._corrupting
+        if adj.batch_max_size is not None:
+            self.batching = replace(self.batching,
+                                    max_size=max(1, adj.batch_max_size))
+            for w in self._main_workers:
+                w.batching = self.batching
+        self._adjust_log.append(
+            (widx,
+             self.scheme.name if self.strategy.coded else None,
+             self.r if self.strategy.coded else None,
+             self.batching.max_size))
 
     # ------------------------------------------------------------------
     def submit(self, qid, x):
         """x: one query batch (leading batch dim, usually 1)."""
         q = Query(qid, x, arrival=time.perf_counter())
+        if self._controller is not None:
+            self._ctl_tick(q.arrival)
         to_encode = None
         with self.lock:
             if self._shutdown:
@@ -461,10 +603,24 @@ class ParMFrontend:
                     # outputs that finished before the group existed
                     outs = {m: self._early_outs.pop(m) for m in members
                             if m in self._early_outs}
+                    # capture the CURRENT knobs: a controller adjustment
+                    # landing later retunes only subsequent groups — this
+                    # one decodes under the scheme/r it was encoded with
                     self.groups[gid] = {"members": members, "outs": outs,
-                                        "parity": {}, "corrupt_m": set()}
+                                        "parity": {}, "corrupt_m": set(),
+                                        "scheme": self.scheme,
+                                        "r": self.r,
+                                        "det": self._detecting}
                     to_encode = (gid, np.stack(
-                        [self.queries[m].data for m in members]))
+                        [self.queries[m].data for m in members]),
+                        self.scheme, self.r)
+                    if self._pending_adj is not None:
+                        # a deferred adjustment lands exactly at this
+                        # group boundary — the DES applies it at the same
+                        # edge of its event clock
+                        adj, widx = self._pending_adj
+                        self._pending_adj = None
+                        self._apply_adjustment(adj, widx)
             # enqueue under the same lock as the _shutdown check: a
             # concurrent shutdown() either sees these items in its queue
             # drain, or this submit already raised — never an item enqueued
@@ -477,13 +633,19 @@ class ParMFrontend:
             # a JAX dispatch here would stall every completion callback —
             # which is safe because no parity output for this gid can arrive
             # before these puts
-            gid, stacked = to_encode
-            parities = self.encode_fn(stacked)
+            gid, stacked, g_scheme, g_r = to_encode
+            # encode under the scheme the GROUP captured — self.scheme may
+            # already point at a controller-adjusted one
+            if self._user_encode is not None:
+                parities = np.asarray(self._user_encode(stacked))
+            else:
+                parities = np.asarray(g_scheme.encode(stacked))
             with self.lock:
                 dead = self._shutdown
                 if not dead:
-                    for j, pq in enumerate(self.parity_qs):
-                        pq.put(("parity", (gid, j), parities[j]))
+                    for j in range(g_r):
+                        self.parity_qs[j].put(("parity", (gid, j),
+                                               parities[j]))
             if dead:
                 # shutdown won the race while we encoded: flush this
                 # group's unanswered members like any shutdown leftover
@@ -588,6 +750,9 @@ class ParMFrontend:
     def _on_parity_done(self, tag, key, out):
         gid, j = key
         with self.lock:
+            self.parity_served += 1     # parity inference actually ran —
+                                        # the resource axis of the
+                                        # adaptive-redundancy frontier
             info = self.groups.get(gid)
             if info is None:
                 return
@@ -595,11 +760,13 @@ class ParMFrontend:
             self._screen(info)
             self._maybe_decode(gid, info)
 
-    def _recoverable(self, miss_mask, parity_avail):
+    def _recoverable(self, scheme, miss_mask, parity_avail):
         """Which missing rows can be reconstructed now? Delegates to the
         shared ``recoverable_rows`` rule — the same function the DES consults
-        — so the two serving layers cannot drift on decode decisions."""
-        return recoverable_rows(self.scheme, miss_mask, parity_avail)
+        — so the two serving layers cannot drift on decode decisions.
+        ``scheme`` is the one the GROUP captured at assembly, not the
+        frontend's (possibly controller-adjusted) current one."""
+        return recoverable_rows(scheme, miss_mask, parity_avail)
 
     def _screen(self, info):
         """Byzantine vote (``detects_errors`` schemes), with the lock held,
@@ -613,19 +780,20 @@ class ParMFrontend:
         uncorrectable, matching the DES's end-of-run drain.  A voted-out
         response whose query was already answered counts as corrected only
         if that answer came from a clean parity reconstruction."""
-        if not self._detecting:
+        if not info["det"]:
             return
         members = info["members"]
+        g_scheme, g_r = info["scheme"], info["r"]
         mo, po = info["outs"], info["parity"]
         member_avail = np.array([m in mo for m in members])
-        parity_avail = np.array([j in po for j in range(self.r)])
-        if member_avail.sum() + parity_avail.sum() <= self.group_k:
+        parity_avail = np.array([j in po for j in range(g_r)])
+        if member_avail.sum() + parity_avail.sum() <= len(members):
             return                      # no surplus: nothing to vote with
         ref = next(iter(mo.values())) if mo else next(iter(po.values()))
         zeros = np.zeros_like(ref)
         mouts = np.stack([mo.get(m, zeros) for m in members])
-        pouts = np.stack([po.get(j, zeros) for j in range(self.r)])
-        mflags, pflags = self.scheme.flag_errors(
+        pouts = np.stack([po.get(j, zeros) for j in range(g_r)])
+        mflags, pflags = g_scheme.flag_errors(
             mouts, member_avail, pouts, parity_avail)
         for j in np.nonzero(pflags)[0]:
             # eviction is the whole effect: an absent parity can neither be
@@ -643,8 +811,8 @@ class ParMFrontend:
                     self.corrupted_corrected += 1
                 continue
             miss = np.array([mm not in mo for mm in members])
-            pa = np.array([j in po for j in range(self.r)])
-            if not self._recoverable(miss, pa)[int(i)]:
+            pa = np.array([j in po for j in range(g_r)])
+            if not self._recoverable(g_scheme, miss, pa)[int(i)]:
                 # uncorrectable: serve the suspect output rather than hang
                 q.fulfill(out, "model")
 
@@ -658,10 +826,11 @@ class ParMFrontend:
         if not info["parity"]:
             return
         members = info["members"]
+        g_scheme, g_r = info["scheme"], info["r"]
         miss_mask = np.array([m not in info["outs"] for m in members])
         parity_avail = np.array([j in info["parity"]
-                                 for j in range(self.r)])
-        miss_mask = self._recoverable(miss_mask, parity_avail)
+                                 for j in range(g_r)])
+        miss_mask = self._recoverable(g_scheme, miss_mask, parity_avail)
         # only still-unanswered members need serving; answered ones stay in
         # miss_mask so the decode math never uses their absent/evicted data
         missing = [m for m, miss in zip(members, miss_mask)
@@ -681,19 +850,19 @@ class ParMFrontend:
                 # it was just served from a clean reconstruction instead
                 self.corrupted_corrected += 1
 
-        if self.r == 1 and len(missing) == 1 and miss_mask.sum() == 1:
+        if g_r == 1 and len(missing) == 1 and miss_mask.sum() == 1:
             j = members.index(missing[0])
             if self.decode_fn is not None:
                 recon = self.decode_fn(info["parity"][0], outs, j)
             else:
-                recon = np.asarray(self.scheme.decode_one(
+                recon = np.asarray(g_scheme.decode_one(
                     info["parity"][0], outs, j))
             fulfill_clean(missing[0], recon)
             return
         parity_outs = np.stack([
             info["parity"].get(j, np.zeros_like(any_out))
-            for j in range(self.r)])
-        recon = np.asarray(self.scheme.decode(
+            for j in range(g_r)])
+        recon = np.asarray(g_scheme.decode(
             jnp.asarray(parity_outs), jnp.asarray(outs),
             jnp.asarray(miss_mask), jnp.asarray(parity_avail)))
         for m in missing:
@@ -751,6 +920,13 @@ class ParMFrontend:
             q = self.queries.get(qid)
             if q is not None and not q.event.is_set():
                 q.fulfill(self.default_prediction, "flushed")
+        if self._controller is not None and not already:
+            # drain the window clock out to the last submit — the DES
+            # closes the same set (every window whose start precedes the
+            # end of arrivals), so the decision sequences stay comparable
+            wlen = float(self._controller.window_ms)
+            while self._window_idx * wlen < self._last_submit_ms:
+                self._close_window()
 
     def stats(self) -> ServingReport:
         """Typed ``ServingReport`` (dict-compatible) with the same fields the
@@ -762,6 +938,8 @@ class ParMFrontend:
             cq, cp = self.cancelled_queries, self.cancelled_parities
             nb, nbq = self._n_batches, self._n_batch_queries
             cd, cc = self.corrupted_detected, self.corrupted_corrected
+            adjustments = tuple(self._adjust_log)
+            windows, ps = self._window_idx, self.parity_served
         lats = np.array([q.latency_ms for q in queries
                          if q.event.is_set() and q.completed_by != "flushed"])
         by = {}
@@ -790,4 +968,8 @@ class ParMFrontend:
             batches=nb,
             mean_batch_size=(nbq / nb) if nb else 1.0,
             corrupted_detected=cd,
-            corrected=cc)
+            corrected=cc,
+            controller=self._controller.name if self._controller else None,
+            windows=windows,
+            adjustments=adjustments,
+            parity_served=ps)

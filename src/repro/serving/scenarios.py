@@ -378,6 +378,27 @@ class DeterministicCorruption:
 
 
 @dataclass(frozen=True)
+class DeterministicArrivals:
+    """Explicit arrival times — the arrival-process analogue of
+    ``DeterministicSlowdown`` for differential tests: the DES reads these
+    exact times off the scenario, and the threads-engine side of the test
+    paces its ``submit`` calls to the same schedule, so both engines see
+    one arrival pattern (and close identical controller windows)."""
+
+    times_ms: tuple
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [], {}
+
+    def arrival_times(self, cfg, rng):
+        if cfg.n_queries > len(self.times_ms):
+            raise ValueError(
+                f"DeterministicArrivals holds {len(self.times_ms)} arrival "
+                f"times but the trace asks for {cfg.n_queries} queries")
+        return np.asarray(self.times_ms[:cfg.n_queries], dtype=float)
+
+
+@dataclass(frozen=True)
 class BurstyArrivals:
     """Two-state Markov-modulated Poisson process (MMPP): calm periods at
     the configured qps, bursts at ``burst_mult`` times it."""
@@ -499,8 +520,14 @@ def register_scenario(scenario: Scenario) -> Scenario:
     return scenario
 
 
-def available_scenarios():
+def list_scenarios() -> list:
+    """Introspection: registered scenario names, sorted.  Every listed name
+    resolves via ``get_scenario(name)``."""
     return sorted(_SCENARIOS)
+
+
+def available_scenarios():
+    return list_scenarios()
 
 
 def get_scenario(scenario: Union[str, Scenario]) -> Scenario:

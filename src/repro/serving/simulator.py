@@ -77,7 +77,8 @@ import numpy as np
 
 from repro.core.scheme import (decode_cost, encode_cost, get_scheme,
                                recoverable_rows)
-from repro.serving.report import ServingReport
+from repro.serving.controller import Adjustment, get_controller
+from repro.serving.report import ServingReport, build_window
 from repro.serving.scenarios import get_scenario
 from repro.serving.strategy import get_strategy
 
@@ -195,7 +196,7 @@ class _Pool:
 
 
 def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
-             backend=None):
+             backend=None, controller=None):
     """Run the DES under a ``ResilienceStrategy`` (instance or registered
     name).  ``scheme`` (instance or name) overrides the strategy's default
     code for coded strategies; ``scenario`` (instance or name) overrides the
@@ -203,15 +204,18 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     ``repro.serving.scenarios``.  ``backend`` is validated through the same
     ``get_scheme`` resolution the threads engine applies — the DES runs no
     kernel math, but an identical spec must pass or fail identically on both
-    engines.  Returns a ``ServingReport`` (typed, dict-compatible) with
-    latency percentiles and bookkeeping."""
+    engines.  ``controller`` (instance or registered name from
+    ``repro.serving.controller``) closes the loop: every
+    ``controller.window_ms`` of simulated time a ``ctl`` event builds a
+    ``ReportWindow`` from the completions inside the window and applies any
+    returned ``Adjustment`` at the next coding-group boundary — on this
+    clock, as events, so the differential battery can assert identical
+    decision sequences against the threads engine.  Returns a
+    ``ServingReport`` (typed, dict-compatible) with latency percentiles and
+    bookkeeping."""
     strat = get_strategy(strategy)
     rng = np.random.default_rng(cfg.seed)
     k = cfg.k                               # redundancy budget (pool sizing)
-    gk = k                                  # coding-group size
-    schm = None
-    r = cfg.r
-    enc_ms = cfg.encode_ms
     parity_service_ms = cfg.service_ms
     # resolve the scheme UNCONDITIONALLY, exactly like ParMFrontend._build:
     # an invalid scheme/backend must fail identically on both engines even
@@ -222,14 +226,22 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     resolved = get_scheme(want, k=k,
                           r=cfg.r if isinstance(want, str) else None,
                           backend=backend)
+    # the CURRENT deployment knobs — mutable, because a controller may
+    # retune them mid-run; new coding groups capture them at assembly
+    cur = {"schm": None, "r": cfg.r, "gk": k, "enc_ms": cfg.encode_ms,
+           "batch_max": max(1, cfg.batch_max_size)}
     if strat.coded:
-        schm = resolved
-        r = schm.r                          # a scheme may fix its own r
-        gk = schm.k                         # ... and its own group size
-        enc_ms = cfg.encode_ms * encode_cost(schm)
-        if getattr(schm, "approximate", False):
+        cur["schm"] = resolved
+        cur["r"] = resolved.r               # a scheme may fix its own r
+        cur["gk"] = resolved.k              # ... and its own group size
+        cur["enc_ms"] = cfg.encode_ms * encode_cost(resolved)
+        if getattr(resolved, "approximate", False):
             # approx_backup scheme: the parity pool runs cheap backup models
             parity_service_ms = cfg.service_ms / cfg.approx_speedup
+
+    ctl = None
+    if controller is not None:
+        ctl = get_controller(controller)
 
     n = cfg.n_queries
     latency = np.full(n, np.inf)
@@ -238,7 +250,6 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     cancelled = {"q": 0, "p": 0}
     # Byzantine bookkeeping (detects_errors schemes under corrupt-output
     # hazards): responses voted out, and affected predictions served clean
-    detecting = strat.coded and getattr(schm, "detects_errors", False)
     corrupted = {"detected": 0, "corrected": 0}
     member_resp = np.zeros(n, bool)         # member responses the decoder
                                             # currently holds (clean, or
@@ -250,12 +261,17 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                                             # responses whose query is still
                                             # unanswered
 
-    # coding-group bookkeeping (coded strategies only); member availability
-    # is read off ``done`` — a reconstructed member counts as available for
-    # the next decode decision, exactly as in the runtime's _maybe_decode
-    group_of = np.arange(n) // gk
-    n_groups = (n + gk - 1) // gk
-    group_parity_t = np.full((n_groups, max(r, 1)), np.inf)  # parity ready
+    # dynamic coding-group bookkeeping (coded strategies only): groups
+    # assemble from consecutive arrivals and CAPTURE the scheme / r / error
+    # detection active at assembly, so a controller adjustment applies at
+    # the next group boundary without touching in-flight groups — the same
+    # contract the threaded frontend honors.  Member availability is read
+    # off ``done`` — a reconstructed member counts as available for the
+    # next decode decision, exactly as in the runtime's _maybe_decode
+    groups = {}      # gid -> {"members", "schm", "r", "det", "parity_t"}
+    gid_of = {}      # qi -> gid, assigned at arrival
+    pending = []     # members of the group currently assembling
+    next_gid = 0
 
     def tombstoned(item):
         """Dequeue-time redundant-work cancellation — the DES mirror of the
@@ -268,19 +284,22 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                 cancelled["q"] += 1
                 return True
             return False
-        g = idx[0]
-        base = g * gk
-        if done[base:base + gk].all():
+        if done[groups[idx[0]]["members"]].all():
             cancelled["p"] += 1
             return True
         return False
 
-    layout = strat.layout(cfg.m, k, r)
+    # a controller may escalate r at runtime: provision parity pools for
+    # the largest r any of its adjustments may request (its max_r contract)
+    r_pools = cur["r"]
+    if ctl is not None and strat.coded:
+        r_pools = max(r_pools, int(ctl.max_r(cur["r"])))
+    layout = strat.layout(cfg.m, k, cur["r"])
     pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms,
-                           batch_max=max(1, cfg.batch_max_size),
+                           batch_max=cur["batch_max"],
                            skip=tombstoned)}
     if layout.parity:
-        for j in range(r):
+        for j in range(r_pools):
             pools[f"parity{j}"] = _Pool(f"parity{j}", layout.parity, rng,
                                         cfg, parity_service_ms,
                                         skip=tombstoned)
@@ -305,10 +324,59 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         heapq.heappush(events, _Event(t, seq, kind, payload))
         seq += 1
 
+    end_of_arrivals = arrivals[-1]
+
+    # closed-loop machinery: one "ctl" event per observation window whose
+    # START precedes the end of arrivals (the threads engine closes the
+    # same set: at submit time, plus trailing windows at shutdown).  Pushed
+    # BEFORE the arrivals so a ctl event at time t sorts ahead of an
+    # arrival at the same t — the frontend ticks its window clock at the
+    # top of submit(), before recording the query
+    adjust_log = []          # (window_index, scheme, r, batch_max_size)
+    wrecs = []               # (t_done, latency, by) not yet windowed
+    wprev = {"detected": 0, "cancel": 0}    # counter snapshots per window
+    pending_adj = None       # (Adjustment, window_index) deferred to the
+                             # next group boundary
+    n_windows = 0
+    ctl_state = None
+    if ctl is not None:
+        wlen = float(ctl.window_ms)
+        n_windows = int(math.ceil(end_of_arrivals / wlen))
+        for i in range(n_windows):
+            push((i + 1) * wlen, "ctl", i)
+        ctl_state = ctl.init(Adjustment(
+            scheme=cur["schm"].name if strat.coded else None,
+            r=cur["r"] if strat.coded else None,
+            batch_max_size=cur["batch_max"]))
+
+    def apply_adjustment(adj, widx):
+        """Retune the CURRENT knobs; in-flight groups keep what they
+        captured.  Scheme/r apply only to coded strategies; batching to
+        any.  The adjustment log records the post-adjustment knobs, and the
+        threads engine records the identical tuples — the differential
+        battery compares them verbatim."""
+        if strat.coded and (adj.scheme is not None or adj.r is not None):
+            name = adj.scheme if adj.scheme is not None \
+                else cur["schm"].name
+            want_r = adj.r if adj.r is not None else cur["r"]
+            new = get_scheme(name, k=k, r=want_r, backend=backend)
+            if new.r > r_pools:
+                raise ValueError(
+                    f"controller adjustment needs r={new.r} parity pools "
+                    f"but only {r_pools} were provisioned — raise "
+                    f"Controller.max_r")
+            cur["schm"], cur["r"], cur["gk"] = new, new.r, new.k
+            cur["enc_ms"] = cfg.encode_ms * encode_cost(new)
+        if adj.batch_max_size is not None:
+            cur["batch_max"] = max(1, adj.batch_max_size)
+            pools["main"].batch_max = cur["batch_max"]
+        adjust_log.append((widx,
+                           cur["schm"].name if strat.coded else None,
+                           cur["r"] if strat.coded else None,
+                           cur["batch_max"]))
+
     for i, t in enumerate(arrivals):
         push(t, "arrive", i)
-
-    end_of_arrivals = arrivals[-1]
 
     if scen is not None:
         # scenario-owned hazards: realize crash/slowdown/heterogeneity
@@ -345,6 +413,8 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             done[qi] = True
             latency[qi] = t - arrival_t[qi]
             how[qi] = by
+            if ctl is not None:
+                wrecs.append((t, latency[qi], by))
 
     def revote(g, t):
         """Joint Byzantine vote over group ``g``'s held responses — the DES
@@ -371,10 +441,13 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         n_cand = len(cm) + len(cp)
         if not n_cand:
             return
-        base = g * gk
-        n_held = int(member_resp[base:base + gk].sum()) + \
-            int(np.isfinite(group_parity_t[g, :r]).sum())
-        if n_held < gk + 2 * n_cand:
+        info = groups.get(g)
+        if info is None:
+            return      # group not assembled yet: no surplus can exist
+        mem = info["members"]
+        n_held = int(member_resp[mem].sum()) + \
+            int(np.isfinite(info["parity_t"]).sum())
+        if n_held < len(mem) + 2 * n_cand:
             return
         corrupted["detected"] += n_cand
         for qi in cm:
@@ -385,7 +458,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             else:
                 corrupt_stash[qi] = t
         for j in cp:
-            group_parity_t[g, j] = np.inf
+            info["parity_t"][j] = np.inf
         corrupt_members.pop(g, None)
         corrupt_parities.pop(g, None)
 
@@ -397,24 +470,26 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         trustworthy response recorded", NOT "query unanswered": an SLO- or
         eviction-answered member without a held response has no data to
         decode with), so the two layers agree by construction."""
-        base = g * gk
-        if base + gk > n:
-            return          # partial trailing group: the runtime never
-                            # encodes one, so the DES doesn't decode one
-        miss = ~member_resp[base:base + gk]
-        if not miss.any() or done[base:base + gk].all():
+        info = groups.get(g)
+        if info is None:
+            return          # never-assembled (partial trailing) group: the
+                            # runtime never encodes one, so no decode here
+        mem = info["members"]
+        miss = ~member_resp[mem]
+        if not miss.any() or done[mem].all():
             return
-        parity_avail = np.isfinite(group_parity_t[g, :r])
+        parity_avail = np.isfinite(info["parity_t"])
         if not parity_avail.any():
             return
-        rows = recoverable_rows(schm, miss, parity_avail)
+        rows = recoverable_rows(info["schm"], miss, parity_avail)
         if not rows.any():
             return
-        ready = t + cfg.decode_ms * decode_cost(schm, int(rows.sum()))
+        ready = t + cfg.decode_ms * decode_cost(info["schm"],
+                                                int(rows.sum()))
         for j in np.nonzero(rows)[0]:
-            qi = base + int(j)
+            qi = int(mem[int(j)])
             complete(qi, max(ready, arrival_t[qi]), by=1)
-            if detecting and qi in corrupt_stash:
+            if info["det"] and qi in corrupt_stash:
                 # a member whose own response was voted out as corrupted,
                 # now served from a clean reconstruction instead
                 corrupted["corrected"] += 1
@@ -428,15 +503,33 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             for _ in range(strat.mirror):
                 pools["main"].submit(("q", qi))
             dispatch("main", t)
-            if strat.coded and qi % gk == gk - 1:
-                # group complete -> encode + dispatch r parity queries, one
-                # per parity model (§3.5); encoding happens on the frontend,
-                # so model its cost (scheme-owned: free for identity
-                # "encodes") as added latency on each parity path
-                g = group_of[qi]
-                for j in range(r):
-                    pools[f"parity{j}"].submit(("p", (g, j)))
-                    dispatch(f"parity{j}", t + enc_ms)
+            if strat.coded:
+                gid_of[qi] = next_gid
+                pending.append(qi)
+                if len(pending) == cur["gk"]:
+                    # group complete -> capture the current knobs, encode +
+                    # dispatch r parity queries, one per parity model
+                    # (§3.5); encoding happens on the frontend, so model
+                    # its cost (scheme-owned: free for identity "encodes")
+                    # as added latency on each parity path
+                    g = next_gid
+                    next_gid += 1
+                    groups[g] = {
+                        "members": np.array(pending, dtype=int),
+                        "schm": cur["schm"], "r": cur["r"],
+                        "det": getattr(cur["schm"], "detects_errors",
+                                       False),
+                        "parity_t": np.full(cur["r"], np.inf)}
+                    pending.clear()
+                    for j in range(cur["r"]):
+                        pools[f"parity{j}"].submit(("p", (g, j)))
+                        dispatch(f"parity{j}", t + cur["enc_ms"])
+                    if pending_adj is not None:
+                        # a deferred adjustment lands exactly at this group
+                        # boundary — the frontend's contract
+                        adj, widx = pending_adj
+                        pending_adj = None
+                        apply_adjustment(adj, widx)
             if strat.slo_default and cfg.slo_ms is not None:
                 push(t + cfg.slo_ms, "slo", qi)
         elif ev.kind == "finish":
@@ -459,8 +552,18 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             deferred = []
             for kind, idx in items:
                 if kind == "q":
-                    if corrupt and detecting:
-                        g = int(group_of[idx])
+                    # detection follows the scheme the item's GROUP
+                    # captured (a member finishing before its group
+                    # assembles screens under the knobs it will assemble
+                    # with — the current ones)
+                    if strat.coded:
+                        g = int(gid_of[idx])
+                        ginfo = groups.get(g)
+                        det = ginfo["det"] if ginfo is not None else \
+                            getattr(cur["schm"], "detects_errors", False)
+                    else:
+                        det = False
+                    if corrupt and det:
                         member_resp[idx] = True
                         corrupt_members.setdefault(g, set()).add(idx)
                         deferred.append(idx)
@@ -469,11 +572,12 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                     complete(idx, t)
                     if strat.coded:
                         member_resp[idx] = True
-                        touched.append(int(group_of[idx]))
+                        touched.append(g)
                 else:  # parity output (g, j)
                     g, j = idx
-                    group_parity_t[g, j] = min(group_parity_t[g, j], t)
-                    if corrupt and detecting:
+                    ginfo = groups[g]
+                    ginfo["parity_t"][j] = min(ginfo["parity_t"][j], t)
+                    if corrupt and ginfo["det"]:
                         corrupt_parities.setdefault(
                             int(g), set()).add(int(j))
                     touched.append(int(g))
@@ -494,6 +598,31 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             complete(ev.payload, t, by=2)
         elif ev.kind == "shuffle":
             schedule_shuffle(t)
+        elif ev.kind == "ctl":
+            # close observation window [t - wlen, t): completions are
+            # bucketed by their completion TIMESTAMP (a decode recorded
+            # just before the boundary may complete just after it — that
+            # record belongs to the next window), counters by per-window
+            # delta.  Adjustments apply immediately when no group is
+            # assembling, else at the next group boundary
+            widx = ev.payload
+            take = [rec for rec in wrecs if rec[0] < t]
+            wrecs[:] = [rec for rec in wrecs if rec[0] >= t]
+            win = build_window(
+                widx, t - wlen, t,
+                [(lat, by == 1) for (_, lat, by) in take],
+                corrupted_detected=corrupted["detected"]
+                - wprev["detected"],
+                cancellations=cancelled["q"] + cancelled["p"]
+                - wprev["cancel"])
+            wprev["detected"] = corrupted["detected"]
+            wprev["cancel"] = cancelled["q"] + cancelled["p"]
+            adj, ctl_state = ctl.observe(ctl_state, win)
+            if adj is not None:
+                if pending:
+                    pending_adj = (adj, widx)
+                else:
+                    apply_adjustment(adj, widx)
 
     # detected-but-uncorrectable responses: the decoder knows they are
     # erroneous but never held enough clean responses to re-decode, so the
@@ -514,7 +643,8 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     return ServingReport(
         engine="sim",
         strategy=strat.name,
-        scheme=schm.name if schm is not None else None,
+        # the report names the scheme the run ENDED on (post-adjustments)
+        scheme=cur["schm"].name if strat.coded else None,
         scenario=scen.name if scen is not None else None,
         n=n,
         median_ms=float(np.percentile(lat, 50)),
@@ -530,4 +660,9 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         mean_batch_size=(main.n_items / main.n_calls) if main.n_calls
         else 1.0,
         corrupted_detected=corrupted["detected"],
-        corrected=corrupted["corrected"])
+        corrected=corrupted["corrected"],
+        controller=ctl.name if ctl is not None else None,
+        windows=n_windows,
+        adjustments=tuple(adjust_log),
+        parity_served=sum(p.n_items for name, p in pools.items()
+                          if name.startswith("parity")))

@@ -105,8 +105,14 @@ def register_strategy(strategy: ResilienceStrategy, *,
     return strategy
 
 
-def available_strategies():
+def list_strategies() -> list:
+    """Introspection: registered strategy names, sorted.  Every listed name
+    resolves via ``get_strategy(name)``."""
     return sorted(_STRATEGIES)
+
+
+def available_strategies():
+    return list_strategies()
 
 
 def get_strategy(strategy: Union[str, ResilienceStrategy],

@@ -136,7 +136,29 @@ def test_checked_in_baseline_matches_smoke_metric_set():
         assert f"smoke_byzantine_{scheme}_corrected" in metrics
     assert metrics["smoke_byzantine_approxifer_corrupted_detected"] > 0
     assert metrics["smoke_byzantine_sum_corrupted_detected"] == 0
+    # the adaptive-controller pair: gated latency on both sides, with the
+    # parity_served/adjustments counters riding as informational resource
+    # signals
+    for scen in ("bursty", "storm"):
+        for tag in ("adaptive", "static_r1"):
+            assert f"smoke_{tag}_{scen}_p999_ms" in metrics, (tag, scen)
+            assert f"smoke_{tag}_{scen}_parity_served" in metrics, (tag, scen)
+        assert f"smoke_adaptive_{scen}_adjustments" in metrics, scen
     assert all(isinstance(v, (int, float)) for v in metrics.values())
+
+
+def test_baseline_shows_adaptive_controller_beats_static_tail():
+    """The controller smoke pair exists to document frontier dominance on
+    episodic fault scenarios: the checked-in baseline itself must show the
+    closed-loop run beating the static r=1 deployment's tail while having
+    actually adjusted (a baseline where the controller never fired would
+    gate nothing)."""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        metrics = json.load(f)["metrics"]
+    for scen in ("bursty", "storm"):
+        assert (metrics[f"smoke_adaptive_{scen}_p999_ms"]
+                < metrics[f"smoke_static_r1_{scen}_p999_ms"]), scen
+        assert metrics[f"smoke_adaptive_{scen}_adjustments"] >= 1, scen
 
 
 def test_baseline_shows_adaptive_batching_improves_overloaded_tail():

@@ -1,0 +1,320 @@
+"""Closed-loop adaptive-redundancy controller tests (serving/controller.py).
+
+Covers the controller protocol + registry, the empty-window-safe rate
+guards shared by ``ServingReport`` and ``ReportWindow``, the threshold /
+hysteresis decision policies as pure functions of window sequences, the
+no-op equivalence of the ``static`` controller through the DES, and the
+PR's deliverable: on the ``bursty`` and ``storm`` regimes the adaptive
+deployment strictly dominates every static (scheme, r) configuration on
+the p999-latency-vs-parity-resource frontier (seeded DES, deterministic).
+"""
+import math
+
+import pytest
+
+from repro.serving.controller import (Adjustment, HysteresisController,
+                                      StaticController, ThresholdController,
+                                      available_controllers, get_controller,
+                                      list_controllers, register_controller)
+from repro.serving.report import ReportWindow, ServingReport, build_window
+from repro.serving.simulator import SimConfig, simulate
+
+
+# ----------------------------------------------------- registry round-trips --
+def test_every_registry_lists_resolvable_names():
+    """The introspection helpers' contract: every listed name resolves
+    through the matching getter — controllers enumerate their candidate
+    actions this way, so a listed-but-unresolvable name would break the
+    control loop at runtime, not at import."""
+    from repro.core.scheme import get_scheme, list_schemes
+    from repro.serving.scenarios import get_scenario, list_scenarios
+    from repro.serving.strategy import get_strategy, list_strategies
+
+    assert list_schemes() == sorted(list_schemes())
+    for name in list_schemes():
+        assert get_scheme(name, k=2).name == name
+    for name in list_strategies():
+        assert get_strategy(name).name == name
+    for name in list_scenarios():
+        assert get_scenario(name).name == name
+    for name in list_controllers():
+        assert get_controller(name).name == name
+    # the legacy available_* spellings stay aliases of the same lists
+    from repro.core.scheme import available_schemes
+    from repro.serving.scenarios import available_scenarios
+    from repro.serving.strategy import available_strategies
+    assert available_schemes() == list_schemes()
+    assert available_strategies() == list_strategies()
+    assert available_scenarios() == list_scenarios()
+    assert available_controllers() == list_controllers()
+
+
+def test_builtin_controllers_registered():
+    assert {"static", "threshold", "hysteresis"} <= set(list_controllers())
+
+
+def test_register_controller_rejects_silent_replacement():
+    with pytest.raises(ValueError, match="already registered"):
+        register_controller("threshold", StaticController)
+    # same-factory re-registration is a no-op (module re-import safety)
+    register_controller("threshold", ThresholdController)
+    # and override=True replaces deliberately — restore immediately
+    register_controller("threshold", StaticController, override=True)
+    register_controller("threshold", ThresholdController, override=True)
+
+
+def test_get_controller_resolution_and_errors():
+    with pytest.raises(KeyError, match="unknown controller"):
+        get_controller("nope")
+    with pytest.raises(TypeError, match="not a Controller"):
+        get_controller(object())
+    # instances pass through untouched; kwargs reach the factory
+    ctl = ThresholdController(window_ms=250.0)
+    assert get_controller(ctl) is ctl
+    assert get_controller("threshold", window_ms=250.0).window_ms == 250.0
+
+
+# ------------------------------------------------- empty-window-safe rates --
+def test_empty_report_and_window_rates_are_zero_not_errors():
+    """The shared ``_safe_rate`` guard: zero completions means "no
+    evidence", reported as 0.0 — never a ZeroDivisionError out of a quiet
+    window or an empty run."""
+    rep = ServingReport(n=0, reconstructions=0)
+    assert rep.straggler_rate == 0.0
+    assert rep.corruption_rate == 0.0
+    assert rep.cancellation_rate == 0.0
+    win = ReportWindow(n=0)
+    assert win.straggler_rate == 0.0
+    assert win.corruption_rate == 0.0
+    assert win.cancellation_rate == 0.0
+    built = build_window(3, 0.0, 100.0, [])
+    assert built.n == 0
+    assert math.isnan(built.p50_ms) and math.isnan(built.p999_ms)
+    assert built.straggler_rate == 0.0
+
+
+def test_build_window_computes_percentiles_and_rates():
+    recs = [(10.0, False), (20.0, True), (30.0, False), (40.0, True)]
+    win = build_window(7, 500.0, 1000.0, recs, corrupted_detected=1,
+                      cancellations=2)
+    assert (win.index, win.t0_ms, win.t1_ms, win.n) == (7, 500.0, 1000.0, 4)
+    assert win.reconstructions == 2
+    assert win.straggler_rate == 0.5
+    assert win.corruption_rate == 0.25
+    assert win.cancellation_rate == 0.5
+    assert win.p50_ms == 25.0
+    assert win.p999_ms == pytest.approx(40.0, rel=1e-3)
+
+
+def test_report_rates_follow_counts():
+    rep = ServingReport(n=10, reconstructions=3, corrupted_detected=1,
+                        cancelled_queries=1, cancelled_parities=1)
+    assert rep.straggler_rate == 0.3
+    assert rep.corruption_rate == 0.1
+    assert rep.cancellation_rate == 0.2
+    # Mapping view exposes the derived rates too
+    assert rep["straggler_rate"] == 0.3
+
+
+# ------------------------------------------------------- decision policies --
+def _win(n=100, recon=0, corrupted=0, p50=25.0, p999=30.0, index=0):
+    return ReportWindow(index=index, t0_ms=0.0, t1_ms=1000.0, n=n,
+                        p50_ms=p50, p999_ms=p999, reconstructions=recon,
+                        corrupted_detected=corrupted)
+
+
+BASE = Adjustment(scheme="sum", r=1, batch_max_size=1)
+
+
+def test_threshold_escalates_on_hot_window_and_returns_to_base():
+    ctl = ThresholdController(down_windows=1)
+    state = ctl.init(BASE)
+    # calm window in base mode: hold
+    adj, state = ctl.observe(state, _win())
+    assert adj is None
+    # hot via tail ratio (p999/p50 >= 3): escalate in one window
+    adj, state = ctl.observe(state, _win(p999=100.0))
+    assert adj == Adjustment(scheme="approxifer", r=2, batch_max_size=4)
+    # still turbulent (in-between window): hold the escalation
+    adj, state = ctl.observe(state, _win(p999=50.0))
+    assert adj is None
+    # genuinely calm window: de-escalate back to the captured base
+    adj, state = ctl.observe(state, _win())
+    assert adj == BASE
+
+
+def test_threshold_escalates_on_straggler_and_corruption_signals():
+    ctl = ThresholdController()
+    # straggler threshold sits ABOVE the benign parity race rate (~0.3 at
+    # k=2): 30% reconstructions must NOT escalate, 50% must
+    adj, _ = ctl.observe(ctl.init(BASE), _win(recon=30))
+    assert adj is None
+    adj, _ = ctl.observe(ctl.init(BASE), _win(recon=50))
+    assert adj is not None
+    adj, _ = ctl.observe(ctl.init(BASE), _win(corrupted=5))
+    assert adj is not None
+
+
+def test_threshold_holds_on_empty_windows_and_resets_streaks():
+    """An empty window carries no evidence: it neither escalates nor
+    counts toward a calm streak (it resets both streaks)."""
+    ctl = ThresholdController(down_windows=2)
+    state = ctl.init(BASE)
+    adj, state = ctl.observe(state, _win(p999=100.0))     # escalate
+    assert adj is not None
+    adj, state = ctl.observe(state, _win(index=1))        # calm 1/2
+    assert adj is None
+    adj, state = ctl.observe(state, _win(n=0, index=2))   # empty: reset
+    assert adj is None
+    adj, state = ctl.observe(state, _win(index=3))        # calm 1/2 again
+    assert adj is None
+    adj, state = ctl.observe(state, _win(index=4))        # calm 2/2
+    assert adj == BASE
+
+
+def test_controller_is_functional_and_reusable():
+    """One frozen instance drives two interleaved state threads without
+    cross-talk — the property that lets a single controller run both
+    engines of a differential test."""
+    ctl = ThresholdController()
+    s1, s2 = ctl.init(BASE), ctl.init(BASE)
+    adj1, s1 = ctl.observe(s1, _win(p999=100.0))
+    adj2, s2 = ctl.observe(s2, _win())
+    assert adj1 is not None and adj2 is None
+    assert s1.mode == "escalated" and s2.mode == "base"
+
+
+def test_hysteresis_debounces_both_directions():
+    ctl = HysteresisController()
+    assert ctl.up_windows == 2 and ctl.down_windows > ctl.up_windows
+    state = ctl.init(BASE)
+    adj, state = ctl.observe(state, _win(p999=100.0))     # hot 1/2
+    assert adj is None
+    adj, state = ctl.observe(state, _win(p999=100.0))     # hot 2/2
+    assert adj is not None
+    for i in range(ctl.down_windows - 1):
+        adj, state = ctl.observe(state, _win(index=i))
+        assert adj is None
+    adj, state = ctl.observe(state, _win(index=9))
+    assert adj == BASE
+
+
+def test_static_controller_never_adjusts():
+    ctl = StaticController()
+    state = ctl.init(BASE)
+    for w in (_win(), _win(p999=1000.0), _win(n=0), _win(recon=100)):
+        adj, state = ctl.observe(state, w)
+        assert adj is None
+    assert ctl.max_r(3) == 3
+
+
+def test_threshold_validates_at_construction():
+    with pytest.raises(ValueError, match="not a registered coding scheme"):
+        ThresholdController(escalate_scheme="nope")
+    with pytest.raises(ValueError, match="escalate_r"):
+        ThresholdController(escalate_r=0)
+    with pytest.raises(ValueError, match="up_windows"):
+        ThresholdController(up_windows=0)
+    with pytest.raises(ValueError, match="r must be"):
+        Adjustment(r=0)
+    with pytest.raises(ValueError, match="batch_max_size"):
+        Adjustment(batch_max_size=0)
+    assert ThresholdController().max_r(1) == 2
+    assert ThresholdController().max_r(3) == 3
+
+
+# --------------------------------------------------------- engine coupling --
+def test_static_controller_is_a_noop_through_the_des():
+    """The ``static`` controller observes every window but never adjusts —
+    the report must carry the controller bookkeeping yet match the
+    controller-less run on every serving metric (ctl events draw no RNG,
+    so the event sequence is otherwise identical)."""
+    cfg = SimConfig(n_queries=2000)
+    plain = simulate(cfg, "parm", scenario="bursty")
+    static = simulate(cfg, "parm", scenario="bursty", controller="static")
+    assert static.controller == "static"
+    assert static.windows > 0
+    assert static.adjustments == ()
+    for key in ("n", "median_ms", "p99_ms", "p999_ms", "mean_ms", "max_ms",
+                "reconstructions", "cancelled_queries", "cancelled_parities",
+                "completed_by"):
+        assert static[key] == plain[key], key
+    assert plain.controller is None and plain.windows == 0
+
+
+def _static_grid(cfg_kw, scenario):
+    """The static (scheme, r) grid the adaptive run must beat: the r=1
+    deployment and both r=2 escalation end-states."""
+    grid = {}
+    for tag, scheme, r in (("sum_r1", None, 1), ("sum_r2", "sum", 2),
+                           ("apx_r2", "approxifer", 2)):
+        rep = simulate(SimConfig(r=r, **cfg_kw), "parm", scheme=scheme,
+                       scenario=scenario)
+        grid[tag] = rep
+    return grid
+
+
+def _assert_dominates(adaptive, grid, scenario):
+    """Strict frontier dominance: lower p999 than EVERY static point, and
+    less parity work than every static point that matches the escalated
+    redundancy (r=2) — i.e. the adaptive run achieves better tails than
+    always-on redundancy while paying for it only during turbulence."""
+    assert adaptive.adjustments, (scenario, "controller never escalated")
+    for tag, rep in grid.items():
+        assert adaptive.p999_ms < rep.p999_ms, (
+            scenario, tag, adaptive.p999_ms, rep.p999_ms)
+    for tag in ("sum_r2", "apx_r2"):
+        assert adaptive.parity_served < grid[tag].parity_served, (
+            scenario, tag, adaptive.parity_served, grid[tag].parity_served)
+
+
+def test_adaptive_beats_static_frontier_on_bursty_smoke():
+    """Deterministic (seeded DES) frontier check at smoke scale — the fast
+    lane's lock on the PR deliverable; the full-scale sweep runs in the
+    slow lane below and in benchmarks/latency.py."""
+    cfg_kw = dict(n_queries=2000)
+    adaptive = simulate(SimConfig(**cfg_kw), "parm", scenario="bursty",
+                        controller="threshold")
+    _assert_dominates(adaptive, _static_grid(cfg_kw, "bursty"), "bursty")
+
+
+def test_adaptive_controller_stays_quiet_on_calm_workload():
+    """No turbulence, no adjustments: the benign parity completion race
+    (~30% at k=2) must not read as straggling."""
+    rep = simulate(SimConfig(n_queries=2000), "parm", scenario="calm",
+                   controller="threshold")
+    assert rep.adjustments == ()
+    assert rep.windows > 0
+
+
+@pytest.mark.slow
+def test_adaptive_beats_static_frontier_at_scale():
+    """Full-scale frontier dominance on BOTH turbulent regimes (the PR
+    acceptance criterion): adaptive p999 strictly below every static
+    (scheme, r) point AND parity work strictly below every static r=2
+    point, on bursty and storm."""
+    cfg_kw = dict(n_queries=8000)
+    for scenario in ("bursty", "storm"):
+        adaptive = simulate(SimConfig(**cfg_kw), "parm", scenario=scenario,
+                            controller="threshold")
+        _assert_dominates(adaptive, _static_grid(cfg_kw, scenario), scenario)
+
+
+def test_controller_flows_through_deployment_spec():
+    """DeploymentSpec(controller=...) reaches the DES engine and surfaces
+    in the report — names and instances both."""
+    import numpy as np
+
+    from repro.serving.api import DeploymentSpec, Trace, deploy
+
+    def fwd(p, x):
+        return x @ p
+
+    W = np.eye(4, dtype=np.float32)
+    spec = DeploymentSpec(fwd=fwd, params=W, parity_params=[W],
+                          strategy="parm", scheme="sum", k=2, m=2,
+                          controller="threshold", scenario="bursty")
+    rep = deploy(spec, engine="sim").replay(
+        Trace(n_queries=1000, qps=270.0, seed=0, n_shuffles=0))
+    assert rep["controller"] == "threshold"
+    assert rep["windows"] > 0

@@ -511,6 +511,102 @@ def test_simulator_resolves_schemes_through_registry():
         assert r["scheme"] == inst.name
 
 
+def test_controller_adjustment_sequence_matches_across_engines():
+    """Closed-loop battery case: ONE ``DeploymentSpec`` with a threshold
+    controller through BOTH engines must make the IDENTICAL decision
+    sequence — escalate to (approxifer, r=2) after a hot window, drop back
+    to the deployment base after a calm one — with matching
+    reconstruction / cancellation / parity-work accounting.
+
+    The pattern (all times in scenario ms, ``window_ms=500``):
+
+    * arrivals at 0, 5, 600, 605 (``DeterministicArrivals`` read by the
+      DES; the threads side paces its submits to the same schedule);
+    * window 0: main0 straggles (+300) inside [0, 500), so q0 is served by
+      a parity reconstruction — straggler_rate 0.5 >= 0.45 -> HOT ->
+      escalate at the window-0 boundary, BEFORE group 1 assembles;
+    * window 1: all mains healthy (+60), group 1 runs under the escalated
+      (approxifer, r=2) knobs and completes via its originals —
+      straggler_rate 0, tail ratio ~1 -> CALM -> de-escalate to base.
+
+    Expected on BOTH engines: adjustments ((0, 'approxifer', 2, 1),
+    (1, 'sum', 1, 1)), 2 windows, 1 reconstruction, 0 cancellations, and
+    3 parity inferences served (group 0's one sum parity + group 1's two
+    approxifer extras, all dequeued while their groups were incomplete)."""
+    import time as _time
+
+    from repro.core.scheme import get_scheme
+    from repro.serving.controller import ThresholdController
+    from repro.serving.scenarios import DeterministicArrivals
+
+    scen = Scenario(
+        "diff-controller",
+        (DeterministicArrivals(times_ms=(0.0, 5.0, 600.0, 605.0)),
+         # window 0: main0 is the straggler; window 1 onward: healthy
+         DeterministicSlowdown(targets=(("main", 0),), add_ms=300.0,
+                               t0=0.0, t1=500.0),
+         DeterministicSlowdown(targets=(("main", 0),), add_ms=60.0,
+                               t0=500.0),
+         DeterministicSlowdown(targets=(("main", 1),), add_ms=60.0),
+         # parity pools answer in 100 ms — after the healthy mains' 60 ms,
+         # before the straggler's 300 ms
+         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0)),
+                               add_ms=100.0)))
+    ctl = ThresholdController(window_ms=500.0, escalate_batch_max=1,
+                              down_windows=1)
+    spec, W = _make_spec("sum", 2, 1, scen)
+    spec = spec.replace(controller=ctl)
+    expected_adj = ((0, "approxifer", 2, 1), (1, "sum", 1, 1))
+
+    sim = _run_sim(spec, n=4)
+
+    # threads engine by hand: pace submits to the arrival schedule.  Warm
+    # every XLA path first (deployed fwd, both schemes' encodes at the
+    # exact serving shapes) so no first-call compile skews the schedule,
+    # then rebase the frontend's controller clock AND the fault adapters'
+    # wall-clock origin to "now", making scenario-ms == wall-ms from the
+    # first submit.
+    zq = np.zeros((2, 1, 8), np.float32)
+    np.asarray(get_scheme("sum", k=2, r=1).encode(zq))
+    np.asarray(get_scheme("approxifer", k=2, r=2).encode(zq))
+    np.asarray(_linear_fwd(W, np.zeros((1, 8), np.float32)))
+    rng = np.random.default_rng(0)
+    sess = deploy(spec, engine="threads")
+    try:
+        fe = sess.frontend
+        fe.encode_fn(zq)
+        pool_sizes = {"main": 2, "parity0": 1, "parity1": 1}
+        delay_fn, _ = fe.scenario.adapters(
+            pool_sizes, seed=spec.scenario_seed,
+            horizon_ms=spec.scenario_horizon_ms,
+            time_scale=spec.scenario_time_scale)
+        for w in fe.workers:
+            w.delay_fn = delay_fn
+        fe._origin = _time.perf_counter()
+        t0 = _time.perf_counter()
+        for i, at_ms in enumerate((0.0, 5.0, 600.0, 605.0)):
+            lag = t0 + at_ms / 1e3 - _time.perf_counter()
+            if lag > 0:
+                _time.sleep(lag)
+            sess.submit(rng.normal(size=(1, 8)).astype(np.float32))
+        assert sess.wait_all(timeout=30)
+    finally:
+        sess.shutdown()
+    rt = sess.stats()
+
+    for rep in (sim, rt):
+        assert rep["controller"] == "threshold", rep
+        assert rep["windows"] == 2, rep
+        assert tuple(rep["adjustments"]) == expected_adj, rep
+        assert rep["reconstructions"] == 1, rep
+        assert rep["cancelled_queries"] == 0, rep
+        assert rep["cancelled_parities"] == 0, rep
+        assert rep["parity_served"] == 3, rep
+        assert rep["completed_by"] == {"model": 3, "parity": 1}, rep
+    # the two engines' decision sequences are compared VERBATIM
+    assert tuple(sim["adjustments"]) == tuple(rt["adjustments"])
+
+
 def test_instance_id_round_trips_and_rejects_collisions():
     """The shared (pool, server) <-> instance-id mapping must be a bijection
     over its encodable range and refuse coordinates that would collide."""
