@@ -34,14 +34,25 @@ many concurrent replays) without cross-talk.  The full protocol:
                           i.e. what "de-escalate" should return to;
 ``observe(state, w)``   — one closed ``ReportWindow`` in, ``(Adjustment |
                           None, new_state)`` out;
-``max_r(base_r)``       — the largest ``r`` any adjustment may request; the
-                          engines provision that many parity pools up front
-                          (pools beyond the deployment's ``parity_params``
-                          run the *deployed* parameters — correct for a
-                          ``model_agnostic`` escalation target like
-                          ``approxifer``, and the reason the default
-                          escalation goes there rather than to a trained
-                          parity model that does not exist at runtime).
+``max_r(base_r)``       — the largest ``r`` any adjustment may request;
+``escalation_r(base_r)``— how many *deployed-params* parity pools the
+                          engines must provision up front, beyond the
+                          deployment's own ``parity_params`` pools.  Any
+                          adjustment that is not an exact return to the
+                          deployment base is dispatched to these pools,
+                          whose workers run the deployed model — correct
+                          exactly for a ``model_agnostic`` escalation
+                          target like ``approxifer`` (the reason the
+                          default escalation goes there rather than to a
+                          trained parity model that does not exist at
+                          runtime); the engines REJECT non-agnostic
+                          escalation targets at adjustment time.  Return 0
+                          for a controller that never leaves the base
+                          (``static``), so its pool layout — and thus any
+                          seeded hazard realization — is identical to a
+                          controller-less deployment.  Optional: engines
+                          fall back to ``max_r(base_r)`` (conservative)
+                          when a controller does not define it.
 
 Built-ins (``register_controller`` / ``get_controller``):
 
@@ -121,6 +132,9 @@ class StaticController:
 
     def max_r(self, base_r: int) -> int:
         return base_r
+
+    def escalation_r(self, base_r: int) -> int:
+        return 0        # never leaves the base: no extra pools, no RNG drift
 
 
 @dataclass(frozen=True)
@@ -206,6 +220,14 @@ class ThresholdController:
 
     def max_r(self, base_r: int) -> int:
         return max(base_r, self.escalate_r)
+
+    def escalation_r(self, base_r: int) -> int:
+        # a "no-op escalation" (same scheme family, same r) would still be
+        # dispatched to deployed-params pools; only skip provisioning when
+        # the policy can never leave the base at all
+        if self.escalate_scheme is None and self.escalate_r == base_r:
+            return 0
+        return self.escalate_r
 
     def init(self, base: Adjustment) -> _BangBangState:
         return _BangBangState(base=base)

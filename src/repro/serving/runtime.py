@@ -42,12 +42,15 @@ are properties of the *frontend*, not of the code:
   trailing windows closed at shutdown) and emits ``Adjustment``s that retune
   scheme / r / batch size.  Adjustments land at the next coding-group
   boundary; in-flight groups keep the scheme/r they captured at assembly, so
-  nothing is dropped mid-decode.  Parity pools are provisioned up front for
-  ``Controller.max_r`` — pools beyond the deployment's own ``parity_params``
-  run the *deployed* parameters (correct for a ``model_agnostic`` escalation
-  target like ``approxifer``) — and idle until an escalation dispatches to
-  them.  The adjustment log uses the same tuples the DES records, so the
-  differential battery compares decision sequences verbatim.
+  nothing is dropped mid-decode.  Parity pools are provisioned up front in
+  two families: pools ``0..r-1`` run the deployment's own ``parity_params``,
+  and ``Controller.escalation_r`` extra pools run the *deployed* parameters
+  for escalated groups — a controller adjustment that is not an exact return
+  to the deployment base must name a ``model_agnostic`` scheme (approxifer),
+  whose parity input is a combination of plain queries, so the deployed
+  model is its parity model; groups route to one family or the other by the
+  scheme they captured.  The adjustment log uses the same tuples the DES
+  records, so the differential battery compares decision sequences verbatim.
 
 Used by the end-to-end example (examples/serve_parm.py) and integration tests;
 the 100k-query tail studies use the DES in ``repro.serving.simulator``.
@@ -356,15 +359,35 @@ class ParMFrontend:
         # a scheme may fix its own parity count (replication: r = k)
         self.r = self.scheme.r if self.strategy.coded else \
             (1 if spec.r is None else spec.r)
+        # the deployment's own resolved scheme OBJECT: controller
+        # de-escalation restores this instance (not a fresh registry
+        # default under the same name), and group dispatch routes by
+        # identity against it
+        self._base_scheme = self.scheme
+        self._base_r = self.r
         self.batching = spec.batching
         self._controller = None if spec.controller is None else \
             get_controller(spec.controller)
-        # parity pools exist from construction for the controller's r
-        # ceiling: worker threads cannot be spawned (and JAX re-warmed)
-        # mid-run, so escalation targets idle pools provisioned up front
-        self.r_pools = self.r
+        # Parity pools exist from construction (worker threads cannot be
+        # spawned, and JAX re-warmed, mid-run), in TWO families:
+        #   pools 0 .. r-1             — the deployment's own parity models;
+        #   pools r .. r+agn_r-1       — escalation pools running the
+        #                                *deployed* parameters, sized by
+        #                                Controller.escalation_r.
+        # Every controller adjustment that is not an exact return to the
+        # deployment base dispatches to the second family — its scheme must
+        # be model_agnostic (parity input is a combination of plain
+        # queries), so the deployed model IS its parity model.  The base
+        # family never serves an escalated group: its pools run trained
+        # parity models (e.g. ParM 'sum') whose outputs another code's
+        # decoder must not consume.
+        self._agn_base = self.r
+        self._agn_r = 0
         if self._controller is not None and self.strategy.coded:
-            self.r_pools = max(self.r, int(self._controller.max_r(self.r)))
+            esc = getattr(self._controller, "escalation_r",
+                          self._controller.max_r)
+            self._agn_r = max(0, int(esc(self.r)))
+        self.r_pools = self.r + self._agn_r
         self._user_encode = spec.encode_fn
         self.encode_fn = spec.encode_fn or (
             lambda q: np.asarray(self.scheme.encode(q)))
@@ -465,19 +488,22 @@ class ParMFrontend:
                 parity_params = [parity_params]
             assert len(parity_params) == self.r, \
                 (len(parity_params), self.r)
-            # controller-provisioned pools beyond the deployment's own
-            # parity models run the DEPLOYED parameters: the escalation
-            # target is model_agnostic (its parity input is a combination
-            # of plain queries), so the deployed model IS its parity model
+            # escalation pools run the DEPLOYED model end to end: plain
+            # fwd + spec.params, never spec.parity_fwd (which may be a
+            # different cheap-backup architecture trained for the base
+            # code) — a model_agnostic scheme's parity input is a
+            # combination of plain queries, so the deployed model IS its
+            # parity model
             parity_params = list(parity_params) + \
-                [spec.params] * (self.r_pools - len(parity_params))
+                [spec.params] * self._agn_r
             self.parity_qs = []
             for j in range(self.r_pools):
                 pq = queue.Queue()
                 self.parity_qs.append(pq)
+                p_fwd = (spec.parity_fwd or fwd) if j < self.r else fwd
                 for i in range(layout.parity):
                     w = ModelInstance(instance_id(f"parity{j}", i), pq,
-                                      spec.parity_fwd or fwd,
+                                      p_fwd,
                                       parity_params[j],
                                       self._on_parity_done, delay_fn,
                                       skip_fn=self._should_skip,
@@ -501,24 +527,37 @@ class ParMFrontend:
         sorting its ctl events ahead of same-time arrivals."""
         ts = self.spec.scenario_time_scale
         now_ms = (now - self._origin) * 1e3 / ts
-        self._last_submit_ms = max(self._last_submit_ms, now_ms)
-        wlen = float(self._controller.window_ms)
-        while (self._window_idx + 1) * wlen <= now_ms:
-            self._close_window()
+        with self.lock:
+            self._last_submit_ms = max(self._last_submit_ms, now_ms)
+        while self._close_window(now_ms):
+            pass
 
-    def _close_window(self):
+    def _close_window(self, now_ms=None):
         """Close window ``[widx*wlen, (widx+1)*wlen)``: bucket completions
         by completion timestamp (scenario ms), counters by per-window
         delta, hand the window to the controller, and apply its adjustment
         — immediately when no group is assembling, else deferred to the
         next group boundary.  Latencies are reported in scenario ms so
-        controller thresholds mean the same thing on both engines."""
+        controller thresholds mean the same thing on both engines.
+
+        Returns ``True`` iff a window was closed.  The elapsed check runs
+        UNDER the lock: two concurrent ``submit()``s may both observe an
+        expired window outside any lock, race into this method, and the
+        loser must not close the *next* window early — it re-reads
+        ``_window_idx`` under the lock and bails when the winner already
+        advanced it past ``now_ms``.  ``now_ms=None`` is the shutdown
+        drain: close windows out to the last submit, then stop."""
         ctl = self._controller
         ts = self.spec.scenario_time_scale
         wlen = float(ctl.window_ms)
-        widx = self._window_idx
-        t1 = (widx + 1) * wlen
         with self.lock:
+            widx = self._window_idx
+            t1 = (widx + 1) * wlen
+            if now_ms is not None:
+                if t1 > now_ms:
+                    return False
+            elif widx * wlen >= self._last_submit_ms:
+                return False
             recs = []
             for qid, q in self.queries.items():
                 if qid in self._window_counted or not q.event.is_set() \
@@ -544,6 +583,7 @@ class ParMFrontend:
                     self._pending_adj = (adj, widx)
                 else:
                     self._apply_adjustment(adj, widx)
+        return True
 
     def _apply_adjustment(self, adj, widx):
         """Lock held.  Retune the CURRENT knobs; in-flight groups keep the
@@ -556,13 +596,32 @@ class ParMFrontend:
             name = adj.scheme if adj.scheme is not None \
                 else self.scheme.name
             want_r = adj.r if adj.r is not None else self.r
-            new = get_scheme(name, k=self.k, r=want_r,
-                             backend=self.spec.backend)
-            if new.r > self.r_pools:
-                raise ValueError(
-                    f"controller adjustment needs r={new.r} parity pools "
-                    f"but only {self.r_pools} were provisioned — raise "
-                    f"Controller.max_r")
+            if name == self._base_scheme.name and want_r == self._base_r:
+                # de-escalation: restore the deployment's own scheme
+                # INSTANCE — re-resolving by name would silently swap a
+                # non-default-configured scheme for a registry default,
+                # and identity (`is`) is what routes groups back to the
+                # trained parity pools
+                new = self._base_scheme
+            else:
+                new = get_scheme(name, k=self.k, r=want_r,
+                                 backend=self.spec.backend)
+                if not getattr(new, "model_agnostic", False):
+                    # escalation pools run the deployed parameters; a
+                    # trained-parity scheme's decoder would consume the
+                    # wrong model's outputs and serve numerically wrong
+                    # reconstructions
+                    raise ValueError(
+                        f"controller adjustment to scheme {name!r} "
+                        f"(r={new.r}) is not the deployment base and not "
+                        f"model_agnostic — runtime escalation can only "
+                        f"target schemes whose parity pool runs the "
+                        f"deployed parameters")
+                if new.r > self._agn_r:
+                    raise ValueError(
+                        f"controller adjustment needs r={new.r} "
+                        f"escalation pools but only {self._agn_r} were "
+                        f"provisioned — raise Controller.escalation_r")
             self.scheme, self.r, self.group_k = new, new.r, new.k
             self._detecting = getattr(new, "detects_errors", False) and \
                 self._corrupting
@@ -635,17 +694,26 @@ class ParMFrontend:
             # before these puts
             gid, stacked, g_scheme, g_r = to_encode
             # encode under the scheme the GROUP captured — self.scheme may
-            # already point at a controller-adjusted one
-            if self._user_encode is not None:
+            # already point at a controller-adjusted one.  A user encode_fn
+            # encodes the DEPLOYMENT's code: groups captured under a
+            # controller-escalated scheme must use that scheme's own
+            # encoder, or decode would consume parities of the wrong code.
+            base = g_scheme is self._base_scheme
+            if self._user_encode is not None and base:
                 parities = np.asarray(self._user_encode(stacked))
             else:
                 parities = np.asarray(g_scheme.encode(stacked))
+            # routing: base-scheme groups go to the trained parity pools
+            # 0..r-1; escalated groups to the deployed-params escalation
+            # pools at offset _agn_base — a trained parity model's outputs
+            # must never enter another code's decoder
+            ofs = 0 if base else self._agn_base
             with self.lock:
                 dead = self._shutdown
                 if not dead:
                     for j in range(g_r):
-                        self.parity_qs[j].put(("parity", (gid, j),
-                                               parities[j]))
+                        self.parity_qs[ofs + j].put(("parity", (gid, j),
+                                                     parities[j]))
             if dead:
                 # shutdown won the race while we encoded: flush this
                 # group's unanswered members like any shutdown leftover
@@ -924,9 +992,8 @@ class ParMFrontend:
             # drain the window clock out to the last submit — the DES
             # closes the same set (every window whose start precedes the
             # end of arrivals), so the decision sequences stay comparable
-            wlen = float(self._controller.window_ms)
-            while self._window_idx * wlen < self._last_submit_ms:
-                self._close_window()
+            while self._close_window():
+                pass
 
     def stats(self) -> ServingReport:
         """Typed ``ServingReport`` (dict-compatible) with the same fields the

@@ -238,6 +238,11 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         if getattr(resolved, "approximate", False):
             # approx_backup scheme: the parity pool runs cheap backup models
             parity_service_ms = cfg.service_ms / cfg.approx_speedup
+    # the deployment's own resolved scheme OBJECT and r: controller
+    # de-escalation restores this instance (not a fresh registry default
+    # under the same name), and group dispatch routes by identity against
+    # it — the same contract as ParMFrontend._base_scheme
+    base_schm, base_r = cur["schm"], cur["r"]
 
     ctl = None
     if controller is not None:
@@ -289,19 +294,26 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             return True
         return False
 
-    # a controller may escalate r at runtime: provision parity pools for
-    # the largest r any of its adjustments may request (its max_r contract)
-    r_pools = cur["r"]
+    # A controller may escalate at runtime: parity pools come in TWO
+    # families, mirroring ParMFrontend._build.  Pools 0..base_r-1 are the
+    # deployment's own parity pools; Controller.escalation_r extra pools
+    # model workers running the *deployed* parameters (plain service time,
+    # never the approx-backup speedup), and every adjustment that is not an
+    # exact return to the base dispatches there.
+    agn_base, agn_r = cur["r"], 0
     if ctl is not None and strat.coded:
-        r_pools = max(r_pools, int(ctl.max_r(cur["r"])))
+        esc = getattr(ctl, "escalation_r", ctl.max_r)
+        agn_r = max(0, int(esc(cur["r"])))
+    r_pools = cur["r"] + agn_r
     layout = strat.layout(cfg.m, k, cur["r"])
     pools = {"main": _Pool("main", layout.main, rng, cfg, cfg.service_ms,
                            batch_max=cur["batch_max"],
                            skip=tombstoned)}
     if layout.parity:
         for j in range(r_pools):
+            svc = parity_service_ms if j < cur["r"] else cfg.service_ms
             pools[f"parity{j}"] = _Pool(f"parity{j}", layout.parity, rng,
-                                        cfg, parity_service_ms,
+                                        cfg, svc,
                                         skip=tombstoned)
 
     # pre-draw arrivals (a scenario may replace Poisson with MMPP bursts)
@@ -349,27 +361,46 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             r=cur["r"] if strat.coded else None,
             batch_max_size=cur["batch_max"]))
 
-    def apply_adjustment(adj, widx):
+    def apply_adjustment(adj, widx, live=True):
         """Retune the CURRENT knobs; in-flight groups keep what they
         captured.  Scheme/r apply only to coded strategies; batching to
         any.  The adjustment log records the post-adjustment knobs, and the
         threads engine records the identical tuples — the differential
-        battery compares them verbatim."""
+        battery compares them verbatim.  ``live=False`` marks a trailing
+        window (past the last arrival): record the decision and the final
+        knobs but leave the serving pools alone — the threads engine only
+        closes trailing windows at shutdown, after its workers have
+        joined, so a trailing adjustment there can no longer batch or
+        serve anything either."""
         if strat.coded and (adj.scheme is not None or adj.r is not None):
             name = adj.scheme if adj.scheme is not None \
                 else cur["schm"].name
             want_r = adj.r if adj.r is not None else cur["r"]
-            new = get_scheme(name, k=k, r=want_r, backend=backend)
-            if new.r > r_pools:
-                raise ValueError(
-                    f"controller adjustment needs r={new.r} parity pools "
-                    f"but only {r_pools} were provisioned — raise "
-                    f"Controller.max_r")
+            if name == base_schm.name and want_r == base_r:
+                # de-escalation: restore the deployment's own scheme
+                # instance (never a fresh registry default under the same
+                # name), re-enabling identity-routing to the trained pools
+                new = base_schm
+            else:
+                new = get_scheme(name, k=k, r=want_r, backend=backend)
+                if not getattr(new, "model_agnostic", False):
+                    raise ValueError(
+                        f"controller adjustment to scheme {name!r} "
+                        f"(r={new.r}) is not the deployment base and not "
+                        f"model_agnostic — runtime escalation can only "
+                        f"target schemes whose parity pool runs the "
+                        f"deployed parameters")
+                if new.r > agn_r:
+                    raise ValueError(
+                        f"controller adjustment needs r={new.r} "
+                        f"escalation pools but only {agn_r} were "
+                        f"provisioned — raise Controller.escalation_r")
             cur["schm"], cur["r"], cur["gk"] = new, new.r, new.k
             cur["enc_ms"] = cfg.encode_ms * encode_cost(new)
         if adj.batch_max_size is not None:
             cur["batch_max"] = max(1, adj.batch_max_size)
-            pools["main"].batch_max = cur["batch_max"]
+            if live:
+                pools["main"].batch_max = cur["batch_max"]
         adjust_log.append((widx,
                            cur["schm"].name if strat.coded else None,
                            cur["r"] if strat.coded else None,
@@ -521,9 +552,14 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                                        False),
                         "parity_t": np.full(cur["r"], np.inf)}
                     pending.clear()
+                    # base-scheme groups go to the trained parity pools;
+                    # escalated groups to the deployed-params escalation
+                    # pools at offset agn_base (ParMFrontend routes by the
+                    # same identity test)
+                    ofs = 0 if cur["schm"] is base_schm else agn_base
                     for j in range(cur["r"]):
-                        pools[f"parity{j}"].submit(("p", (g, j)))
-                        dispatch(f"parity{j}", t + cur["enc_ms"])
+                        pools[f"parity{ofs + j}"].submit(("p", (g, j)))
+                        dispatch(f"parity{ofs + j}", t + cur["enc_ms"])
                     if pending_adj is not None:
                         # a deferred adjustment lands exactly at this group
                         # boundary — the frontend's contract
@@ -619,10 +655,15 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
             wprev["cancel"] = cancelled["q"] + cancelled["p"]
             adj, ctl_state = ctl.observe(ctl_state, win)
             if adj is not None:
-                if pending:
+                # windows past the last arrival are trailing: the threads
+                # engine closes them at shutdown (workers joined, pending
+                # group flushed), so the decision is recorded but applies
+                # log-only — no pool may change mid-drain
+                live = t <= end_of_arrivals
+                if live and pending:
                     pending_adj = (adj, widx)
                 else:
-                    apply_adjustment(adj, widx)
+                    apply_adjustment(adj, widx, live=live)
 
     # detected-but-uncorrectable responses: the decoder knows they are
     # erroneous but never held enough clean responses to re-decode, so the

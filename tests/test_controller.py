@@ -318,3 +318,244 @@ def test_controller_flows_through_deployment_spec():
         Trace(n_queries=1000, qps=270.0, seed=0, n_shuffles=0))
     assert rep["controller"] == "threshold"
     assert rep["windows"] > 0
+
+
+# ------------------------------------------- escalation pools and routing --
+def test_escalation_r_protocol_on_builtins():
+    """``escalation_r`` sizes the deployed-params pool family: 0 for a
+    controller that never leaves the base (pool layout — and thus any
+    seeded hazard realization — identical to a controller-less run),
+    ``escalate_r`` for the threshold family."""
+    assert StaticController().escalation_r(1) == 0
+    assert StaticController().escalation_r(3) == 0
+    assert ThresholdController().escalation_r(1) == 2
+    assert HysteresisController().escalation_r(2) == 2
+    # a policy that cannot leave the base at all provisions nothing
+    assert ThresholdController(escalate_scheme=None,
+                               escalate_r=1).escalation_r(1) == 0
+
+
+def _escalation_spec(parity_params, *, encode_fn=None, scenario=None,
+                     window_ms=1e9):
+    """Threads-engine spec with a threshold controller whose windows never
+    fire on their own (window_ms is huge) — escalation in these tests is
+    driven explicitly through ``_apply_adjustment``, so the timing is
+    deterministic."""
+    import numpy as np
+
+    from repro.serving.api import DeploymentSpec
+
+    def fwd(p, x):
+        return x @ p
+
+    rng = np.random.default_rng(7)
+    W = np.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    spec = DeploymentSpec(
+        fwd=fwd, params=W, parity_params=parity_params(W),
+        strategy="parm", scheme="sum", k=2, r=1, m=2,
+        scenario=scenario, encode_fn=encode_fn,
+        controller=ThresholdController(window_ms=window_ms,
+                                       escalate_batch_max=1))
+    return spec, W
+
+
+def test_escalated_groups_route_to_deployed_params_pools():
+    """REGRESSION (reviewer, high): escalation to the model_agnostic
+    approxifer must dispatch parity work to the deployed-params escalation
+    pools, never to the deployment's trained parity pools.  The trained
+    parity model here is -W — numerically WRONG for any other code — so a
+    misrouted escalated group would decode garbage, while correct routing
+    serves the exact linear prediction."""
+    import numpy as np
+
+    from repro.serving.api import deploy
+    from repro.serving.scenarios import (DeterministicSlowdown, Scenario,
+                                         pool_of_iid)
+
+    scen = Scenario(
+        "esc-route",
+        # stall EVERY main instance effectively forever: the mains share one
+        # queue, so stalling just one would let the other serve all queries
+        # and no group would ever need decoding.  With both dead, an
+        # approxifer (k=2, r=2) reconstruction off the escalation pools is
+        # the ONLY way any query completes — no timing race for the asserts
+        # to lose.  shutdown() joins workers with a 5 s timeout and they are
+        # daemon threads, so the sleeping mains are abandoned, not waited
+        # out.
+        (DeterministicSlowdown(targets=(("main", 0), ("main", 1)),
+                               add_ms=60_000.0),))
+    spec, W = _escalation_spec(lambda W: [np.asarray(-W)], scenario=scen)
+    sess = deploy(spec, engine="threads")
+    try:
+        fe = sess.frontend
+        # two-family provisioning: 1 trained pool + 2 escalation pools
+        assert fe._agn_base == 1 and fe._agn_r == 2
+        assert len(fe.parity_qs) == 3
+        for w in fe.workers:
+            pool, _ = pool_of_iid(w.iid)
+            if pool == "parity0":
+                assert np.allclose(np.asarray(w.params), -W)
+            elif pool.startswith("parity"):
+                assert w.params is spec.params      # the DEPLOYED model
+                assert w.fwd is spec.fwd            # ... and architecture
+        with fe.lock:
+            fe._apply_adjustment(
+                Adjustment(scheme="approxifer", r=2, batch_max_size=1), 0)
+        rng = np.random.default_rng(1)
+        # warm-up group: compiles the whole escalated encode/decode path end
+        # to end and pins the recon-count baseline for the measured group
+        for _ in range(2):
+            sess.submit(rng.normal(size=(1, 8)).astype(np.float32))
+        assert sess.wait_all(timeout=60)
+        warm_recon = sess.stats()["reconstructions"]
+        xs = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(2)]
+        futs = [sess.submit(x) for x in xs]
+        assert sess.wait_all(timeout=60)
+        # main0 never answers, so its query is served by an approxifer
+        # decode off the escalation pools — exact for a linear deployment
+        # iff the parities were computed with W, not the trained -W model
+        for f, x in zip(futs, xs):
+            np.testing.assert_allclose(np.asarray(f.result(timeout=1.0)),
+                                       x @ W, rtol=1e-4, atol=1e-4)
+        assert sess.stats()["reconstructions"] >= warm_recon + 1
+    finally:
+        sess.shutdown()
+
+
+def test_user_encode_fn_is_bypassed_for_escalated_groups():
+    """REGRESSION (reviewer): a user encode_fn encodes the DEPLOYMENT's
+    code; groups captured under a controller-escalated scheme must encode
+    through that scheme's own encoder, or decode would consume parities of
+    the wrong code.  After de-escalation the user encoder is back."""
+    import numpy as np
+
+    from repro.core.scheme import get_scheme
+    from repro.serving.api import deploy
+
+    calls = []
+    sum_code = get_scheme("sum", k=2, r=1)
+
+    def counting_encode(stacked):
+        calls.append(1)
+        return np.asarray(sum_code.encode(stacked))
+
+    spec, W = _escalation_spec(lambda W: [W], encode_fn=counting_encode)
+    sess = deploy(spec, engine="threads")
+    try:
+        fe = sess.frontend
+        x = np.ones((1, 8), np.float32)
+        for _ in range(2):
+            sess.submit(x)
+        assert len(calls) == 1                  # base group: user encoder
+        with fe.lock:
+            fe._apply_adjustment(
+                Adjustment(scheme="approxifer", r=2, batch_max_size=1), 0)
+        for _ in range(2):
+            sess.submit(x)
+        assert len(calls) == 1                  # escalated group: bypassed
+        with fe.lock:
+            fe._apply_adjustment(Adjustment(scheme="sum", r=1), 1)
+        for _ in range(2):
+            sess.submit(x)
+        assert len(calls) == 2                  # back on the base code
+        assert sess.wait_all(timeout=20)
+    finally:
+        sess.shutdown()
+
+
+def test_adjustment_restores_base_scheme_instance_and_validates_target():
+    """REGRESSION (reviewer): de-escalation restores the deployment's own
+    resolved scheme INSTANCE (never a fresh registry default under the
+    same name), and any adjustment that is not an exact return to the base
+    must name a model_agnostic scheme that fits the provisioned escalation
+    pools."""
+    from repro.serving.api import deploy
+
+    spec, W = _escalation_spec(lambda W: [W])
+    sess = deploy(spec, engine="threads")
+    try:
+        fe = sess.frontend
+        base = fe.scheme
+        assert fe._base_scheme is base
+        with fe.lock:
+            fe._apply_adjustment(Adjustment(scheme="approxifer", r=2), 0)
+        assert fe.scheme is not base
+        assert fe.scheme.name == "approxifer" and fe.r == 2
+        with fe.lock:
+            fe._apply_adjustment(Adjustment(scheme="sum", r=1), 1)
+        assert fe.scheme is base                # identity, not a lookalike
+        # a trained-parity scheme cannot be an escalation target: the
+        # escalation pools run the deployed parameters
+        with pytest.raises(ValueError, match="model_agnostic"):
+            with fe.lock:
+                fe._apply_adjustment(Adjustment(scheme="sum", r=2), 2)
+        # an agnostic target beyond the provisioned escalation pools fails
+        # with the provisioning contract in the message
+        with pytest.raises(ValueError, match="escalation pools"):
+            with fe.lock:
+                fe._apply_adjustment(Adjustment(scheme="approxifer", r=3), 2)
+    finally:
+        sess.shutdown()
+
+
+def test_close_window_rechecks_elapsed_under_lock():
+    """REGRESSION (reviewer): two concurrent submits can both observe an
+    expired window outside the lock and race into ``_close_window`` — the
+    loser must re-check under the lock and NOT close the next window
+    early.  The direct calls pin the in-lock early-return; the hammer
+    asserts an exact window count under contention."""
+    import threading as th
+
+    from repro.serving.api import deploy
+
+    spec, W = _escalation_spec(lambda W: [W], window_ms=10.0)
+    sess = deploy(spec, engine="threads")
+    try:
+        fe = sess.frontend
+        assert fe._close_window(5.0) is False
+        assert fe._window_idx == 0
+        assert fe._close_window(10.0) is True
+        assert fe._window_idx == 1
+        # 8 threads tick the same 95 ms clock edge concurrently: exactly
+        # windows 1..8 close (9 total boundaries at 10 ms), never more
+        now = fe._origin + 0.095
+        threads = [th.Thread(target=fe._ctl_tick, args=(now,))
+                   for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert fe._window_idx == 9
+    finally:
+        sess.shutdown()
+
+
+def test_des_trailing_window_adjustments_are_log_only():
+    """REGRESSION (reviewer): ctl events past the last arrival are
+    trailing — the threads engine closes them at shutdown when workers
+    have joined, so the DES must record the decision but leave the pools
+    alone.  Here the only window closes after every arrival; its
+    escalation (batch_max 4) must not batch the drain: every serving
+    metric matches the controller-less run exactly."""
+    from repro.serving.scenarios import (DeterministicArrivals,
+                                         DeterministicSlowdown, Scenario)
+
+    scen = Scenario(
+        "trailing-ctl",
+        (DeterministicArrivals(times_ms=(0.0, 5.0, 10.0, 15.0, 20.0, 25.0)),
+         DeterministicSlowdown(targets=(("main", 0),), add_ms=200.0),
+         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0),
+                                        ("parity2", 0)), add_ms=50.0)))
+    cfg = SimConfig(n_queries=6, m=1, k=2, r=1, slo_ms=None, n_shuffles=0)
+    plain = simulate(cfg, "parm", scenario=scen)
+    rep = simulate(cfg, "parm", scenario=scen,
+                   controller=ThresholdController(window_ms=300.0))
+    # the single (trailing) window saw a 50% straggler rate: HOT, escalate
+    assert rep.windows == 1
+    assert tuple(rep.adjustments) == ((0, "approxifer", 2, 4),)
+    assert rep.scheme == "approxifer"      # final knobs ARE recorded
+    for key in ("n", "median_ms", "p99_ms", "p999_ms", "mean_ms", "max_ms",
+                "reconstructions", "cancelled_queries", "cancelled_parities",
+                "completed_by", "batches", "mean_batch_size",
+                "parity_served"):
+        assert rep[key] == plain[key], key

@@ -549,8 +549,12 @@ def test_controller_adjustment_sequence_matches_across_engines():
                                t0=500.0),
          DeterministicSlowdown(targets=(("main", 1),), add_ms=60.0),
          # parity pools answer in 100 ms — after the healthy mains' 60 ms,
-         # before the straggler's 300 ms
-         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0)),
+         # before the straggler's 300 ms.  parity0 is the deployment's
+         # trained sum pool; parity1/parity2 are the controller's
+         # escalation pools (deployed params), where escalated approxifer
+         # groups route
+         DeterministicSlowdown(targets=(("parity0", 0), ("parity1", 0),
+                                        ("parity2", 0)),
                                add_ms=100.0)))
     ctl = ThresholdController(window_ms=500.0, escalate_batch_max=1,
                               down_windows=1)
@@ -575,7 +579,7 @@ def test_controller_adjustment_sequence_matches_across_engines():
     try:
         fe = sess.frontend
         fe.encode_fn(zq)
-        pool_sizes = {"main": 2, "parity0": 1, "parity1": 1}
+        pool_sizes = {"main": 2, "parity0": 1, "parity1": 1, "parity2": 1}
         delay_fn, _ = fe.scenario.adapters(
             pool_sizes, seed=spec.scenario_seed,
             horizon_ms=spec.scenario_horizon_ms,
