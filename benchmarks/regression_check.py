@@ -7,8 +7,14 @@ gated metric regressed by more than ``--threshold`` (default 25%).
 
 Gating rules:
 
-* only ``*_ms`` metrics are gated (latencies: higher is worse) — counters
-  like ``*_reconstructions`` are informational;
+* ``*_ms`` metrics are gated as upper bounds (latencies: higher is worse);
+* ``*_eps`` metrics (events per second — simulator throughput) are gated
+  as LOWER bounds: the run fails when current throughput drops more than
+  ``--eps-threshold`` (default 45%) below baseline.  The wide margin
+  absorbs CI-runner speed variance while still catching a hot-loop
+  regression that halves event throughput;
+* everything else (counters like ``*_reconstructions``, ``*_wall_s``) is
+  informational;
 * a gated metric present in the baseline but missing from the current run
   fails (a silently dropped bench is a regression of the gate itself);
 * metrics new in the current run are reported but do not fail — they start
@@ -41,12 +47,19 @@ import os
 import sys
 
 
-def compare(current: dict, baseline: dict, threshold: float):
-    """Returns (rows, failures); each row is a printable CSV line."""
+def compare(current: dict, baseline: dict, threshold: float,
+            eps_threshold: float = 0.45):
+    """Returns (rows, failures); each row is a printable CSV line.
+
+    ``*_ms`` gates are upper bounds (ratio may rise to 1 + threshold);
+    ``*_eps`` gates are lower bounds (ratio may fall to 1 - eps_threshold).
+    """
     rows, failures = [], []
     for name in sorted(baseline):
         base = baseline[name]
-        if not name.endswith("_ms"):
+        higher_worse = name.endswith("_ms")
+        lower_worse = name.endswith("_eps")
+        if not higher_worse and not lower_worse:
             continue
         if name not in current:
             failures.append(f"{name}: missing from current run")
@@ -54,13 +67,17 @@ def compare(current: dict, baseline: dict, threshold: float):
             continue
         cur = current[name]
         ratio = cur / base if base > 0 else 1.0
-        ok = ratio <= 1.0 + threshold
+        if higher_worse:
+            ok = ratio <= 1.0 + threshold
+            detail = (f"+{(ratio - 1):.1%}, threshold {threshold:.0%}")
+        else:
+            ok = ratio >= 1.0 - eps_threshold
+            detail = (f"{(ratio - 1):.1%}, throughput floor "
+                      f"-{eps_threshold:.0%}")
         rows.append(f"{name},{base},{cur},{ratio:.3f},"
                     f"{'ok' if ok else 'REGRESSED'}")
         if not ok:
-            failures.append(
-                f"{name}: {base} -> {cur} (+{(ratio - 1):.1%}, "
-                f"threshold {threshold:.0%})")
+            failures.append(f"{name}: {base} -> {cur} ({detail})")
     for name in sorted(set(current) - set(baseline)):
         rows.append(f"{name},NEW,{current[name]},,info")
     return rows, failures
@@ -102,6 +119,10 @@ def main():
     ap.add_argument("baseline", help="checked-in BENCH_baseline.json")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed relative regression (default 0.25)")
+    ap.add_argument("--eps-threshold", type=float, default=0.45,
+                    help="max allowed relative throughput DROP for *_eps "
+                         "metrics (default 0.45 — wide, to absorb runner "
+                         "speed variance)")
     ap.add_argument("--markdown", default=None, metavar="PATH",
                     help="append a GitHub-flavored summary table here "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
@@ -119,7 +140,7 @@ def main():
                   f"unreadable or malformed ({e})", file=sys.stderr)
             sys.exit(2)
     rows, failures = compare(metrics["current"], metrics["baseline"],
-                             args.threshold)
+                             args.threshold, args.eps_threshold)
     print("metric,baseline,current,ratio,status")
     for row in rows:
         print(row)

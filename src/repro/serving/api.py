@@ -35,7 +35,7 @@ deprecated spellings warn), and ``simulate`` is exactly what
 from __future__ import annotations
 
 import threading
-from dataclasses import asdict, dataclass, field, replace
+from dataclasses import dataclass, field, fields, replace
 from typing import Any, Callable, Optional, Union
 
 from repro.serving.report import ServingReport
@@ -163,6 +163,15 @@ class Trace:
     decode_ms: float = SimConfig.decode_ms
     approx_speedup: float = SimConfig.approx_speedup
     batch_cost: float = SimConfig.batch_cost
+    # multi-tenant mode: a tuple of TenantClass (repro.serving.scenarios)
+    # tagging traffic with shares / WFQ weights / per-class SLOs; empty =
+    # single-tenant.  DESIGN.md §11
+    tenants: tuple = SimConfig.tenants
+    # explicit arrival timestamps (ms).  Takes precedence over both the
+    # Poisson default and any scenario arrival process — the trace-replay
+    # fast lane when timestamps are already in hand (TraceArrivals is the
+    # scenario-level spelling, with cycling)
+    arrival_times_ms: Optional[tuple] = SimConfig.arrival_times_ms
 
 
 class PredictionFuture:
@@ -210,7 +219,10 @@ class PredictionFuture:
         return self._slo_ms is not None and self.latency_ms > self._slo_ms
 
     def __repr__(self):
-        state = self.completed_by or "pending" if self.done() else "pending"
+        # parenthesized: bare ``a or b if c else d`` parses as
+        # ``a or (b if c else d)``, which printed a done-but-unattributed
+        # future as its falsy completed_by instead of "pending"
+        state = (self.completed_by or "pending") if self.done() else "pending"
         return f"PredictionFuture(qid={self.qid}, {state})"
 
 
@@ -317,10 +329,13 @@ class SimSession(Session):
         trace = replace(trace or Trace(), **overrides) if overrides \
             else (trace or Trace())
         spec = self.spec
-        # asdict maps every Trace field 1:1 onto its SimConfig namesake, so
-        # a workload field added to both can never be silently dropped here
+        # every Trace field maps 1:1 onto its SimConfig namesake (the
+        # schema-lock test pins names AND defaults), so a workload field
+        # added to both can never be silently dropped here.  The splat is a
+        # *shallow* field read — asdict() would recurse into TenantClass
+        # entries and hand SimConfig plain dicts instead
         cfg = SimConfig(
-            **asdict(trace),
+            **{f.name: getattr(trace, f.name) for f in fields(trace)},
             m=spec.m, k=spec.k,
             r=1 if spec.r is None else spec.r,
             # None disables the deadline — exactly like the threads engine,

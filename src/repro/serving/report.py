@@ -141,6 +141,15 @@ class ServingReport(Mapping):
     windows: int = 0
     adjustments: tuple = ()     # of (window_index, scheme, r, batch_max_size)
     parity_served: int = 0      # parity-pool inference items actually served
+    # DES instrumentation: how many discrete events the run processed
+    # (arrivals + finishes + control); 0 from the threads engine, which has
+    # no event loop.  events / wall-time is the simulator's throughput
+    # metric, gated in BENCH_baseline.json.
+    events: int = 0
+    # multi-tenant breakdown (DESIGN.md §11): tenant name -> {"n", "share",
+    # "median_ms", "p999_ms", "slo_ms", "slo_violations"}.  Empty for
+    # single-tenant runs; hash=False for the same reason as completed_by.
+    per_tenant: Dict[str, dict] = field(default_factory=dict, hash=False)
 
     # -- Mapping protocol: old ``stats()["p999_ms"]`` call sites keep
     # working.  The view is exactly the dataclass fields plus the derived

@@ -27,7 +27,12 @@ Scenarios are registered like schemes and strategies::
 
 Built-ins: ``calm``, ``shuffle``, ``crash``, ``correlated_slowdown``,
 ``bursty``, ``hetero``, ``byzantine`` (erroneous/corrupted responses —
-the ``CorruptOutputs`` hazard family), ``storm`` (everything at once).
+the ``CorruptOutputs`` hazard family), ``storm`` (everything at once),
+``diurnal`` (sinusoidal nonhomogeneous Poisson arrivals), ``flash_crowd``
+(exponentially-decaying rate spikes).  Arrival processes can also replay
+explicit timestamp traces (``TraceArrivals``), and ``TenantClass`` tags
+traffic with per-tenant shares / WFQ weights / SLOs for the simulator's
+multi-tenant mode (DESIGN.md §11).
 
 The ``byzantine`` family is a different fault *class* from the rest: a
 corrupt window does not (only) delay a response, it makes the response
@@ -49,8 +54,9 @@ from __future__ import annotations
 
 import random as _random
 import time
+from bisect import bisect_right
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -140,38 +146,53 @@ class FaultPlan:
     multipliers, queryable by (pool, server, time).
 
     Windows are bucketed per (pool, server) — pool-wide windows under
-    server -1 — and each bucket keeps a cursor that skips expired entries:
-    lookups are called with (near-)monotonic ``now`` by both consumers (the
-    DES pops events in time order; the runtime adapter passes wall-clock),
-    so a long scenario never rescans its past."""
+    server -1 — each bucket holding parallel sorted ``t0``/``t1`` arrays:
+    a lookup advances a per-bucket cursor past leading windows that ended
+    before ``now`` (both consumers query with (near-)monotonic time — the
+    DES pops events in time order, the runtime adapter passes wall-clock)
+    and bisects the start-time array for the upper bound, so a lookup
+    touches only the handful of windows straddling ``now`` instead of
+    rescanning — or slice-copying — the bucket's tail."""
 
     def __init__(self, windows: List[Window],
                  rates: Dict[Tuple[str, int], float]):
-        self._buckets: Dict[Tuple[str, int], List[Window]] = {}
+        self._wins: Dict[Tuple[str, int], List[Window]] = {}
         for w in windows:
-            self._buckets.setdefault((w.pool, w.server), []).append(w)
-        for ws in self._buckets.values():
+            self._wins.setdefault((w.pool, w.server), []).append(w)
+        self._t0s: Dict[Tuple[str, int], List[float]] = {}
+        self._t1s: Dict[Tuple[str, int], List[float]] = {}
+        for key, ws in self._wins.items():
             ws.sort(key=lambda w: w.t0)
-        self._cursor = {key: 0 for key in self._buckets}
+            self._t0s[key] = [w.t0 for w in ws]
+            self._t1s[key] = [w.t1 for w in ws]
+        self._cursor = {key: 0 for key in self._wins}
         self.rates = rates
         self.n_windows = len(windows)
         self.n_corrupt = sum(1 for w in windows if w.corrupt)
+        self._pools = (frozenset(p for p, _ in self._wins)
+                       | frozenset(p for p, _ in rates))
+
+    def relevant(self, pool: str) -> bool:
+        """Hot-path gate: does this plan ever touch ``pool`` (any window or
+        rate multiplier, at any time)?  A False answer lets the DES skip
+        the per-dispatch ``adjust_service_ms`` call entirely — on calm or
+        narrowly-targeted scenarios that is every dispatch."""
+        return pool in self._pools
 
     def _active(self, pool, server, now):
         for key in ((pool, server), (pool, -1)):
-            ws = self._buckets.get(key)
+            ws = self._wins.get(key)
             if not ws:
                 continue
+            t1s = self._t1s[key]
             i = self._cursor[key]
             # drop leading windows that ended before ``now`` for good
-            while i < len(ws) and ws[i].t1 <= now:
+            while i < len(ws) and t1s[i] <= now:
                 i += 1
             self._cursor[key] = i
-            for w in ws[i:]:
-                if w.t0 > now:
-                    break
-                if now < w.t1:
-                    yield w
+            for j in range(i, bisect_right(self._t0s[key], now, i)):
+                if now < t1s[j]:
+                    yield ws[j]
 
     def rate(self, pool, server) -> float:
         return self.rates.get((pool, server), 1.0) * \
@@ -429,6 +450,148 @@ class BurstyArrivals:
         return times
 
 
+def _thinned_arrivals(n: int, peak_qps: float, accept_fn, rng) -> np.ndarray:
+    """Nonhomogeneous Poisson process via chunked, vectorized thinning:
+    candidate arrivals are drawn at the peak rate in blocks, then kept with
+    probability ``rate(t) / peak`` (``accept_fn`` maps a time array to that
+    ratio).  Returns the first ``n`` accepted times, sorted."""
+    out = np.empty(n)
+    have, t = 0, 0.0
+    chunk = int(max(1024, min(4 * n, 1 << 16)))
+    mean_gap = 1000.0 / peak_qps
+    while have < n:
+        cand = t + np.cumsum(rng.exponential(mean_gap, chunk))
+        keep = cand[rng.random(chunk) < accept_fn(cand)]
+        take = min(keep.size, n - have)
+        out[have:have + take] = keep[:take]
+        have += take
+        t = cand[-1]
+    return out
+
+
+@dataclass(frozen=True)
+class TraceArrivals:
+    """Replay an explicit arrival-timestamp trace (production logs, a
+    public cluster trace, a recorded incident).  If the trace holds fewer
+    timestamps than the run asks for it is tiled cyclically: each replayed
+    epoch is shifted by the trace span plus one mean inter-arrival gap, so
+    the seam between epochs carries the trace's own average spacing rather
+    than a zero-gap collision (set ``cycle=False`` to make a short trace a
+    hard error instead)."""
+
+    times_ms: tuple
+    cycle: bool = True
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [], {}
+
+    def arrival_times(self, cfg, rng):
+        ts = np.asarray(self.times_ms, dtype=float)
+        if ts.ndim != 1 or ts.size == 0:
+            raise ValueError("TraceArrivals needs a non-empty 1-D trace")
+        if ts.size > 1 and np.any(np.diff(ts) < 0):
+            raise ValueError("TraceArrivals trace must be non-decreasing")
+        n = cfg.n_queries
+        if n <= ts.size:
+            return ts[:n].copy()
+        if not self.cycle:
+            raise ValueError(
+                f"TraceArrivals holds {ts.size} arrival times but the "
+                f"trace asks for {n} queries (cycle=False)")
+        gap = (ts[-1] - ts[0]) / max(ts.size - 1, 1)
+        period = (ts[-1] - ts[0]) + max(gap, 1e-9)
+        reps = -(-n // ts.size)
+        base = ts - ts[0]
+        out = np.concatenate([base + i * period for i in range(reps)])
+        return out[:n] + ts[0]
+
+
+@dataclass(frozen=True)
+class DiurnalArrivals:
+    """Sinusoidal day/night load: a nonhomogeneous Poisson process with
+    ``rate(t) = qps * (1 + amplitude * sin(2*pi*t / period_ms))``, sampled
+    by vectorized thinning.  ``cfg.qps`` stays the *mean* rate, so swapping
+    ``calm`` for ``diurnal`` holds total offered load fixed while moving
+    mass into the peaks — the regime where tail latency earns its keep."""
+
+    period_ms: float = 60_000.0
+    amplitude: float = 0.6
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [], {}
+
+    def arrival_times(self, cfg, rng):
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError(
+                f"DiurnalArrivals amplitude must be in [0, 1), "
+                f"got {self.amplitude}")
+        peak = cfg.qps * (1.0 + self.amplitude)
+        two_pi = 2.0 * np.pi
+
+        def accept(t):
+            return (cfg.qps * (1.0 + self.amplitude
+                               * np.sin(two_pi * t / self.period_ms))
+                    / peak)
+
+        return _thinned_arrivals(cfg.n_queries, peak, accept, rng)
+
+
+@dataclass(frozen=True)
+class FlashCrowd:
+    """Flash-crowd arrivals: baseline Poisson at ``qps`` with a spike every
+    ``every_ms`` that multiplies the instantaneous rate by ``spike_mult``
+    and decays exponentially (time constant ``decay_ms``) — the
+    retweet-storm / cache-expiry shape that overwhelms a pool far faster
+    than any MMPP burst."""
+
+    spike_mult: float = 8.0
+    every_ms: float = 12_000.0
+    decay_ms: float = 1_500.0
+
+    def realize(self, pool_sizes, horizon_ms, rng):
+        return [], {}
+
+    def arrival_times(self, cfg, rng):
+        if self.spike_mult < 1.0:
+            raise ValueError(
+                f"FlashCrowd spike_mult must be >= 1, got {self.spike_mult}")
+        peak = cfg.qps * self.spike_mult
+        excess = self.spike_mult - 1.0
+
+        def accept(t):
+            boost = excess * np.exp(-(t % self.every_ms) / self.decay_ms)
+            return cfg.qps * (1.0 + boost) / peak
+
+        return _thinned_arrivals(cfg.n_queries, peak, accept, rng)
+
+
+@dataclass(frozen=True)
+class TenantClass:
+    """One tenant / SLO class for multi-tenant serving (DESIGN.md §11).
+
+    ``share``  — relative fraction of arriving traffic; the simulator
+    normalizes shares over all classes, so ``(3, 1)`` means 75%/25%.
+    ``weight`` — weighted-fair-queueing weight at dequeue time: under
+    contention a tenant with weight 2 drains twice as fast as weight 1.
+    ``slo_ms`` — per-class latency SLO for the per-tenant violation
+    breakdown; ``None`` inherits the trace-level ``slo_ms``.
+    """
+
+    name: str
+    share: float = 1.0
+    weight: float = 1.0
+    slo_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.share <= 0.0:
+            raise ValueError(f"tenant {self.name!r}: share must be > 0")
+        if self.weight <= 0.0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0")
+        if self.slo_ms is not None and self.slo_ms <= 0.0:
+            raise ValueError(f"tenant {self.name!r}: slo_ms must be > 0 "
+                             f"(or None to inherit the trace-level SLO)")
+
+
 @dataclass(frozen=True)
 class Scenario:
     """A named, composable set of hazards consumed by both serving layers."""
@@ -552,6 +715,8 @@ register_scenario(Scenario("bursty", (BurstyArrivals(),
 register_scenario(Scenario("hetero", (HeterogeneousRates(),
                                       NetworkShuffles(n_tenants=2))))
 register_scenario(Scenario("byzantine", (CorruptOutputs(),)))
+register_scenario(Scenario("diurnal", (DiurnalArrivals(),)))
+register_scenario(Scenario("flash_crowd", (FlashCrowd(),)))
 register_scenario(Scenario("storm", (NetworkShuffles(),
                                      InstanceCrash(mtbf_ms=40_000.0),
                                      CorrelatedSlowdown(),

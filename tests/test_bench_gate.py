@@ -1,8 +1,9 @@
 """The CI bench-regression gate (benchmarks/regression_check.py): gating
-rules — only *_ms metrics gate, missing gated metrics fail, new metrics are
-informational — exit codes and the $GITHUB_STEP_SUMMARY markdown rendering,
-and the checked-in baseline staying in sync with the smoke set the bench
-job emits."""
+rules — *_ms metrics gate as upper bounds, *_eps throughput metrics as
+lower bounds, missing gated metrics fail, new metrics are informational —
+exit codes and the $GITHUB_STEP_SUMMARY markdown rendering, and the
+checked-in baseline staying in sync with the smoke set the bench job
+emits."""
 import importlib.util
 import json
 import pathlib
@@ -42,6 +43,31 @@ def test_gate_fails_on_missing_metric_and_reports_new_ones():
     rows, failures = compare(cur, base, threshold=0.25)
     assert any("missing" in f for f in failures)
     assert any(r.startswith("z_p999_ms,NEW") for r in rows)
+
+
+def test_eps_metrics_gate_as_lower_bounds():
+    """*_eps (events/sec — simulator throughput) fails only when current
+    throughput DROPS below baseline by more than --eps-threshold; gains
+    and wall-clock noise within the floor never trip."""
+    base = {"tenmillion_sum_r1_eps": 1_000_000.0}
+    _, failures = compare({"tenmillion_sum_r1_eps": 560_000.0}, base,
+                          threshold=0.25, eps_threshold=0.45)
+    assert not failures                         # -44%: inside the floor
+    _, failures = compare({"tenmillion_sum_r1_eps": 540_000.0}, base,
+                          threshold=0.25, eps_threshold=0.45)
+    assert failures and "tenmillion_sum_r1_eps" in failures[0]
+    _, failures = compare({"tenmillion_sum_r1_eps": 3_000_000.0}, base,
+                          threshold=0.25, eps_threshold=0.45)
+    assert not failures                         # speedups never trip
+    # missing from the current run fails, like any gated metric
+    _, failures = compare({}, base, threshold=0.25, eps_threshold=0.45)
+    assert failures and "missing" in failures[0]
+    # informational metrics (e.g. *_wall_s) still never gate
+    base2 = {"tenmillion_sum_r1_wall_s": 20.0}
+    rows, failures = compare({"tenmillion_sum_r1_wall_s": 500.0}, base2,
+                             threshold=0.25, eps_threshold=0.45)
+    assert not failures
+    assert not any(r.startswith("tenmillion_sum_r1_wall_s,20") for r in rows)
 
 
 def test_gate_exact_threshold_boundary_is_inclusive():
@@ -144,7 +170,39 @@ def test_checked_in_baseline_matches_smoke_metric_set():
             assert f"smoke_{tag}_{scen}_p999_ms" in metrics, (tag, scen)
             assert f"smoke_{tag}_{scen}_parity_served" in metrics, (tag, scen)
         assert f"smoke_adaptive_{scen}_adjustments" in metrics, scen
+    # trace-driven / multi-tenant workloads (DESIGN.md §11)
+    for scen in ("diurnal", "flash_crowd"):
+        assert f"smoke_{scen}_p999_ms" in metrics, scen
+    for tenant in ("gold", "free"):
+        assert f"smoke_tenants_{tenant}_p999_ms" in metrics, tenant
+        assert f"smoke_tenants_{tenant}_slo_violations" in metrics, tenant
+    # the utilization frontier grid and the 10M-query hot-loop speed lock
+    for scheme in ("sum", "replication", "approxifer"):
+        for util in (55, 70, 85):
+            assert f"smoke_frontier_{scheme}_u{util}_p999_ms" in metrics, \
+                (scheme, util)
+    assert "tenmillion_sum_r1_p999_ms" in metrics
+    assert "tenmillion_sum_r1_eps" in metrics
+    assert "tenmillion_sum_r1_wall_s" in metrics
     assert all(isinstance(v, (int, float)) for v in metrics.values())
+
+
+def test_baseline_shows_frontier_ordering_and_hot_loop_speed():
+    """The frontier grid exists to document how each code's tail grows
+    with utilization (monotone per scheme), and the 10M point locks the
+    vectorized hot loop: under 30 s wall and above 0.5M events/sec in the
+    recorded baseline."""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        metrics = json.load(f)["metrics"]
+    for scheme in ("sum", "replication", "approxifer"):
+        p = [metrics[f"smoke_frontier_{scheme}_u{u}_p999_ms"]
+             for u in (55, 70, 85)]
+        # at smoke scale the p999 of 8k queries is an order statistic over
+        # ~8 samples — the middle point is noisy, but the hot end of the
+        # frontier must sit above the cool end
+        assert p[2] > p[0], (scheme, p)
+    assert metrics["tenmillion_sum_r1_wall_s"] < 30.0
+    assert metrics["tenmillion_sum_r1_eps"] > 500_000.0
 
 
 def test_baseline_shows_adaptive_controller_beats_static_tail():
