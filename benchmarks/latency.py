@@ -386,9 +386,18 @@ def main():
     if args.smoke:
         metrics = bench_ci_smoke()
         if args.json:
+            doc = {"n_queries": SMOKE_NQ, "metrics": metrics}
+            try:
+                # a baseline refresh must not wipe the hand-maintained
+                # per-metric "gate" map (see regression_check.py)
+                with open(args.json) as f:
+                    prev = json.load(f)
+                if isinstance(prev, dict) and "gate" in prev:
+                    doc["gate"] = prev["gate"]
+            except (OSError, json.JSONDecodeError):
+                pass
             with open(args.json, "w") as f:
-                json.dump({"n_queries": SMOKE_NQ, "metrics": metrics}, f,
-                          indent=2, sort_keys=True)
+                json.dump(doc, f, indent=2, sort_keys=True)
             print(f"# wrote {len(metrics)} metrics to {args.json}")
         return
     if args.scheme:

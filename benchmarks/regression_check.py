@@ -5,7 +5,7 @@ Compares a fresh ``BENCH_ci.json`` (emitted by
 checked-in ``benchmarks/BENCH_baseline.json`` and exits non-zero when any
 gated metric regressed by more than ``--threshold`` (default 25%).
 
-Gating rules:
+Gating rules (suffix defaults):
 
 * ``*_ms`` metrics are gated as upper bounds (latencies: higher is worse);
 * ``*_eps`` metrics (events per second — simulator throughput) are gated
@@ -20,6 +20,20 @@ Gating rules:
 * metrics new in the current run are reported but do not fail — they start
   gating once the baseline is refreshed.
 
+Per-metric overrides: the baseline document may carry a top-level
+``"gate"`` map, ``{metric: {...}}``, consulted before the suffix rules —
+this is how the kernel bench lane gates without loosening the DES gates:
+
+* ``{"informational": true}``  — never gate this metric (e.g. the
+  machine-dependent ``kernel_*_us`` wall-clocks and autotune block picks);
+* ``{"max": M}``               — absolute upper bound: fail when the
+  current value exceeds ``M`` regardless of the baseline value (e.g. the
+  fused/unfused ``kernel_*_ratio`` metrics pin fused <= unfused with
+  ``max: 1.0`` — machine-robust, unlike wall-clock deltas);
+* ``{"threshold": t}``         — gate as a relative upper bound at ``t``
+  instead of the global ``--threshold`` (forces gating even for metrics
+  the suffix rules would treat as informational).
+
 Exit codes: 0 = gate passed; 1 = at least one metric regressed (or went
 missing); 2 = the gate itself could not run (unreadable or malformed
 input) — distinct, so CI can tell "bench regressed" from "bench broke".
@@ -31,12 +45,18 @@ is set (any GitHub Actions job), the table is appended there, so a
 regression is readable in the run's Summary tab without downloading the
 BENCH_ci.json artifact.
 
-The smoke set is a seeded discrete-event simulation (numpy RNG), so values
-are bit-stable across machines: the gate trips on code changes that shift
-simulated latency semantics, not on CI-runner noise.  Refresh the baseline
-deliberately after an intended change::
+The DES smoke set is a seeded discrete-event simulation (numpy RNG), so
+those values are bit-stable across machines: the gate trips on code
+changes that shift simulated latency semantics, not on CI-runner noise.
+The ``kernel_*`` set is wall-clock and machine-dependent — which is why
+it gates through the ``"gate"`` map (wide bands + absolute ratio bounds)
+instead of the tight DES thresholds.  Refresh the baseline deliberately
+after an intended change (both writers preserve the existing ``gate``
+map)::
 
     PYTHONPATH=src python -m benchmarks.latency --smoke \
+        --json benchmarks/BENCH_baseline.json
+    PYTHONPATH=src python -m benchmarks.kernels_bench --smoke \
         --json benchmarks/BENCH_baseline.json
 """
 from __future__ import annotations
@@ -48,17 +68,27 @@ import sys
 
 
 def compare(current: dict, baseline: dict, threshold: float,
-            eps_threshold: float = 0.45):
+            eps_threshold: float = 0.45, gates: dict | None = None):
     """Returns (rows, failures); each row is a printable CSV line.
 
     ``*_ms`` gates are upper bounds (ratio may rise to 1 + threshold);
     ``*_eps`` gates are lower bounds (ratio may fall to 1 - eps_threshold).
+    ``gates`` is the baseline document's per-metric override map (see the
+    module docstring) — consulted before the suffix rules.
     """
     rows, failures = [], []
+    gates = gates or {}
     for name in sorted(baseline):
         base = baseline[name]
+        gate = gates.get(name, {})
         higher_worse = name.endswith("_ms")
         lower_worse = name.endswith("_eps")
+        abs_max = gate.get("max")
+        metric_threshold = gate.get("threshold", threshold)
+        if gate.get("informational"):
+            continue
+        if abs_max is not None or "threshold" in gate:
+            higher_worse, lower_worse = True, False
         if not higher_worse and not lower_worse:
             continue
         if name not in current:
@@ -67,9 +97,13 @@ def compare(current: dict, baseline: dict, threshold: float,
             continue
         cur = current[name]
         ratio = cur / base if base > 0 else 1.0
-        if higher_worse:
-            ok = ratio <= 1.0 + threshold
-            detail = (f"+{(ratio - 1):.1%}, threshold {threshold:.0%}")
+        if abs_max is not None:
+            ok = cur <= abs_max
+            detail = f"absolute bound max={abs_max}"
+        elif higher_worse:
+            ok = ratio <= 1.0 + metric_threshold
+            detail = (f"+{(ratio - 1):.1%}, threshold "
+                      f"{metric_threshold:.0%}")
         else:
             ok = ratio >= 1.0 - eps_threshold
             detail = (f"{(ratio - 1):.1%}, throughput floor "
@@ -127,20 +161,26 @@ def main():
                     help="append a GitHub-flavored summary table here "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args()
-    metrics = {}
+    metrics, docs = {}, {}
     for label, path in (("current", args.current),
                         ("baseline", args.baseline)):
         try:
             with open(path) as f:
-                metrics[label] = json.load(f)["metrics"]
+                docs[label] = json.load(f)
+            metrics[label] = docs[label]["metrics"]
         except (OSError, json.JSONDecodeError, KeyError, TypeError) as e:
             # exit 2, not a traceback: "the gate could not run" must be
             # distinguishable from "the gate tripped" (exit 1)
             print(f"# bench gate cannot run: {label} file {path!r} is "
                   f"unreadable or malformed ({e})", file=sys.stderr)
             sys.exit(2)
+    gates = docs["baseline"].get("gate") or {}
+    if not isinstance(gates, dict):
+        print(f"# bench gate cannot run: baseline 'gate' map is "
+              f"malformed ({gates!r})", file=sys.stderr)
+        sys.exit(2)
     rows, failures = compare(metrics["current"], metrics["baseline"],
-                             args.threshold, args.eps_threshold)
+                             args.threshold, args.eps_threshold, gates)
     print("metric,baseline,current,ratio,status")
     for row in rows:
         print(row)

@@ -30,6 +30,78 @@ from repro.training.optim import AdamConfig, adam_init, adam_update
 # per-row training set can be built with one einsum instead of a full encode
 _ROW_SEPARABLE_ENCODES = (LinearScheme.encode, ReplicationScheme.encode)
 
+# test hook for the fused encode->forward serving path below: None = fuse
+# whenever the (scheme, parity model) pair is eligible, False = always take
+# the exact unfused fallback, True = require fusion (raise if ineligible)
+_FORCE_FUSED = None
+
+
+def _first_layer_split(parity_params, parity_fwd):
+    """Detect the linear/MLP parity substrate fusion applies to.
+
+    Fusion is sound only when the parity forward is the canonical
+    reshape-then-matmul chain, so the check is exact: ``parity_fwd`` must BE
+    ``models.linear.linear_fwd`` (params ``{"w": [F, V]}``, tail = identity)
+    or ``models.cnn.mlp_fwd`` (params ``{"w": [...], "b": [...]}``, tail =
+    bias + relu + the remaining layers), and every parity row's first-layer
+    matrix must share one shape.  Returns ``(stacked first-layer weights
+    [r, F, V], per-row tail fns)`` or ``None`` (caller falls back to the
+    unfused encode + per-row forward)."""
+    from repro.models.cnn import mlp_fwd
+    from repro.models.linear import linear_fwd
+
+    def one(p):
+        if parity_fwd is linear_fwd and isinstance(p, dict) and \
+                set(p) == {"w"} and getattr(p["w"], "ndim", 0) == 2:
+            return p["w"], None
+        if parity_fwd is mlp_fwd and isinstance(p, dict) and \
+                set(p) == {"w", "b"} and isinstance(p["w"], (list, tuple)):
+            def tail(h, p=p):
+                h = h + p["b"][0]
+                for i in range(1, len(p["w"])):
+                    h = jax.nn.relu(h) @ p["w"][i] + p["b"][i]
+                return h
+            return p["w"][0], tail
+        return None
+    splits = [one(p) for p in parity_params]
+    if any(s is None for s in splits) or \
+            len({tuple(s[0].shape) for s in splits}) != 1:
+        return None
+    return jnp.stack([jnp.asarray(s[0]) for s in splits]), \
+        [s[1] for s in splits]
+
+
+def fused_parity_outputs(scheme, queries, parity_params, parity_fwd):
+    """Serve all r parity rows for stacked coding groups: queries
+    [k, B, ...] -> parity outputs [r, B, V].
+
+    The coded hot path (DESIGN.md §12): when ``scheme``'s encode is the
+    un-overridden linear coeffs product and every parity model is a
+    linear/MLP substrate (see ``_first_layer_split``), encode and the first
+    forward matmul run fused — one ``kernels/fused_encode_forward.py``
+    launch under ``backend="pallas"``, one fused einsum otherwise — and only
+    the per-row MLP tail (bias/relu/rest) runs separately.  Any other
+    (scheme, model) pair takes the exact unfused fallback,
+    ``scheme.encode`` + per-row ``parity_fwd``."""
+    queries = jnp.asarray(queries)
+    fusable = type(scheme).encode is LinearScheme.encode and \
+        isinstance(scheme, LinearScheme) and _FORCE_FUSED is not False
+    split = _first_layer_split(parity_params, parity_fwd) if fusable \
+        else None
+    if split is not None and \
+            split[0].shape[1] == int(np.prod(queries.shape[2:])):
+        weights, tails = split
+        h = scheme.encode_forward(queries, weights)          # [r, B, V1]
+        return jnp.stack([h[j] if tails[j] is None else tails[j](h[j])
+                          for j in range(scheme.r)])
+    if _FORCE_FUSED is True:
+        raise ValueError(
+            "fused parity serving forced (_FORCE_FUSED=True) but the "
+            "(scheme, parity model) pair is not fusable")
+    enc = scheme.encode(queries)
+    return jnp.stack([parity_fwd(parity_params[j], enc[j])
+                      for j in range(scheme.r)])
+
 
 def group_queries(x, k, rng):
     """Randomly group n samples into floor(n/k) coding groups: [G, k, ...]."""

@@ -49,6 +49,14 @@ Built-in entries:
 ``repro.kernels`` (interpret mode on CPU), ``jnp`` uses the pure-jnp
 reference.  The general r>1 least-squares decode always runs in jnp — it is a
 tiny [k, k] solve off the latency-critical path.
+
+Linear schemes additionally expose the fused/batched hot-path surface
+(DESIGN.md §12): ``encode_forward(queries, weights)`` fuses encode with the
+parity models' first forward matmul in one launch, and
+``decode_one_many`` / ``decode_many`` decode ALL recoverable groups of a
+batch-atomic completion in one launch instead of per-group calls.  Schemes
+without these methods simply keep the per-group path — both serving engines
+feature-test with ``hasattr``.
 """
 from __future__ import annotations
 
@@ -150,6 +158,21 @@ def _pallas_encode(queries, coeffs, r):
     return out if batched else out[:, 0]
 
 
+def _pallas_decode_many(parity_outs, outputs, missing_idxs, coeffs):
+    """Route the batched r=1 subtraction decode through the multigroup
+    Pallas kernel: all G stacked groups reconstructed in one launch."""
+    from repro.kernels import ops
+    outs = jnp.asarray(outputs)
+    po = jnp.asarray(parity_outs)
+    G, k = outs.shape[:2]
+    batched = outs.ndim > 3
+    flat = outs.reshape(G, k, 1, -1) if not batched else \
+        outs.reshape(G, k, outs.shape[2], -1)
+    pf = po.reshape((G,) + flat.shape[2:])
+    out = ops.multigroup_decode_op(pf, flat, missing_idxs, coeffs)
+    return out.reshape(po.shape)
+
+
 def _pallas_decode_one(parity_out, outputs, missing_idx, coeffs):
     """Route the r=1 subtraction decode through the Pallas kernel."""
     from repro.kernels import ops
@@ -201,6 +224,28 @@ class LinearScheme:
 
     __call__ = encode
 
+    def encode_forward(self, queries, weights):
+        """Fused coded hot path (DESIGN.md §12): encode the [r, k] projection
+        over the coding dim AND apply each parity row's first forward matmul
+        in one launch.  queries [k, B, ...] (trailing feature dims flattened
+        to F); weights [r, F, V] — one first-layer matrix per parity row
+        (parity models train independently), or [F, V] shared.  Returns
+        [r, B, V].  ``backend="pallas"`` runs
+        ``kernels/fused_encode_forward.py``; jnp is the fallback with the
+        reference semantics (encode, then per-row matmul)."""
+        queries = jnp.asarray(queries)
+        assert queries.shape[0] == self.k, queries.shape
+        weights = jnp.asarray(weights)
+        if weights.ndim == 2:
+            weights = jnp.broadcast_to(weights, (self.r,) + weights.shape)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+            return ops.fused_encode_forward_op(queries, self.coeffs, weights)
+        flat = queries.reshape(queries.shape[0], queries.shape[1], -1)
+        c = self.coeffs.astype(flat.dtype)
+        enc = jnp.tensordot(c, flat, axes=1)                 # [r, B, F]
+        return jnp.einsum("rbf,rfv->rbv", enc, weights.astype(flat.dtype))
+
     def decode_one(self, parity_out, outputs, missing_idx):
         """r=1 subtraction path: F_hat(X_j) = (F_P(P) - sum_{i!=j} c_i F(X_i))
         / c_j."""
@@ -213,6 +258,43 @@ class LinearScheme:
         avail_sum = jnp.einsum("k,k...->...", c * mask, outs)
         po = jnp.asarray(parity_out).astype(jnp.float32)
         return (po - avail_sum) / c[missing_idx]
+
+    def decode_one_many(self, parity_outs, outputs, missing_idxs):
+        """Batched ``decode_one`` over G stacked groups — ONE launch
+        (``kernels/multigroup_decode.py``) instead of G per-group calls.
+        parity_outs [G, ...]; outputs [G, k, ...]; missing_idxs [G] ints.
+        Both serving engines' batch-decode drains route recoverable groups
+        here when more than one lands at once."""
+        if self.backend == "pallas":
+            return _pallas_decode_many(parity_outs, outputs,
+                                       jnp.asarray(missing_idxs),
+                                       self.coeffs[0])
+        c = self.coeffs[0].astype(jnp.float32)               # [k]
+        outs = jnp.asarray(outputs).astype(jnp.float32)
+        idx = jnp.asarray(missing_idxs)
+        avail = c[None, :] * (jnp.arange(self.k)[None, :] != idx[:, None])
+        avail_sum = jnp.einsum("gk,gk...->g...", avail, outs)
+        po = jnp.asarray(parity_outs).astype(jnp.float32)
+        inv = (1.0 / c[idx]).reshape((-1,) + (1,) * (po.ndim - 1))
+        return (po - avail_sum) * inv
+
+    def decode_many(self, parity_outs, outputs, missing_masks,
+                    parity_avail=None):
+        """Batched ``decode`` over G stacked groups: the masked
+        least-squares solve for every group runs as a single vmapped
+        computation (``kernels/multigroup_decode.multigroup_lstsq``) instead
+        of G sequential solves.  parity_outs [G, r, ...]; outputs
+        [G, k, ...]; missing_masks [G, k]; parity_avail [G, r] (default all
+        arrived).  Always jnp, like ``decode`` — the [k, k] solves are off
+        the latency-critical path; batching them is the win."""
+        from repro.kernels.multigroup_decode import multigroup_lstsq
+        parity_outs = jnp.asarray(parity_outs)
+        if parity_avail is None:
+            parity_avail = jnp.ones(parity_outs.shape[:2], bool)
+        return multigroup_lstsq(self.coeffs, parity_outs,
+                                jnp.asarray(outputs),
+                                jnp.asarray(missing_masks),
+                                jnp.asarray(parity_avail))
 
     def decode(self, parity_outs, outputs, missing_mask, parity_avail=None):
         """General masked least-squares decode (exact while #missing <=

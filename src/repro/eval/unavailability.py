@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.configs.resnet18_cifar import IMAGE_SHAPE
 from repro.core.metrics import degraded_accuracy, topk_accuracy
-from repro.core.parity import train_parity_models
+from repro.core.parity import fused_parity_outputs, train_parity_models
 from repro.data.pipeline import batched, cluster_images
 from repro.models.cnn import build
 from repro.training.loss import softmax_xent
@@ -83,11 +83,13 @@ def _degraded(scheme, parity_params, parity_fwd, deployed_params, fwd,
     glabels = yt[:n].reshape(-1, gk)
     member = np.asarray(fwd(deployed_params, jnp.asarray(
         groups.reshape(n, *xt.shape[1:])))).reshape(-1, gk, n_classes)
-    pq = np.asarray(scheme.encode(
-        jnp.asarray(np.moveaxis(groups, 1, 0))))                # [r, G, ...]
-    parity_outs = np.stack(
-        [np.asarray(parity_fwd(parity_params[j], jnp.asarray(pq[j])))
-         for j in range(scheme.r)], axis=1)                     # [G, r, V]
+    # the fused coded hot path: encode + first parity matmul in one launch
+    # for linear/MLP substrates, the exact encode + per-row forward fallback
+    # for everything else (DESIGN.md §12)
+    pouts = np.asarray(fused_parity_outputs(
+        scheme, jnp.asarray(np.moveaxis(groups, 1, 0)), parity_params,
+        parity_fwd))                                            # [r, G, V]
+    parity_outs = np.moveaxis(pouts, 0, 1)                      # [G, r, V]
     return degraded_accuracy(parity_outs, member, glabels, scheme)
 
 
@@ -198,11 +200,9 @@ def accuracy_under_errors(schemes=("sum", "learned", "approxifer"), *,
         glabels = yt[:n].reshape(-1, gk)
         member = np.asarray(fwd(params, jnp.asarray(
             groups.reshape(n, *xt.shape[1:])))).reshape(-1, gk, n_classes)
-        pq = np.asarray(scheme.encode(
-            jnp.asarray(np.moveaxis(groups, 1, 0))))
-        parity_outs = np.stack(
-            [np.asarray(fwd(pp[j], jnp.asarray(pq[j])))
-             for j in range(scheme.r)], axis=1)            # [G, r, V]
+        pouts = np.asarray(fused_parity_outputs(
+            scheme, jnp.asarray(np.moveaxis(groups, 1, 0)), pp, fwd))
+        parity_outs = np.moveaxis(pouts, 0, 1)             # [G, r, V]
         per_rate = {}
         for rate in error_rates:
             rng = np.random.default_rng(seed + int(rate * 1000))

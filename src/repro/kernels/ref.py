@@ -23,6 +23,28 @@ def parity_decode_ref(parity_out, outputs, avail_coeffs, inv_c):
         parity_out.dtype)
 
 
+def fused_encode_forward_ref(queries, coeffs, weights):
+    """queries [k, B, F]; coeffs [r, k]; weights [r, F, V] (one first-layer
+    matrix per parity row) -> [r, B, V]: encode over the coding dim, then
+    each row's first forward matmul (fp32 accumulate throughout)."""
+    enc = jnp.einsum("rk,kbf->rbf", coeffs.astype(jnp.float32),
+                     queries.astype(jnp.float32))
+    out = jnp.einsum("rbf,rfv->rbv", enc, weights.astype(jnp.float32))
+    return out.astype(queries.dtype)
+
+
+def multigroup_decode_ref(parity_outs, outputs, cmat):
+    """parity_outs [G, B, V]; outputs [G, k, B, V]; cmat [G, k+1] (per-group
+    availability-masked coeffs, 0 at the missing index, with 1/c_missing
+    appended).  Returns [G, B, V] — the batched subtraction decode."""
+    k = outputs.shape[1]
+    s = jnp.einsum("gk,gkbv->gbv", cmat[:, :k].astype(jnp.float32),
+                   outputs.astype(jnp.float32))
+    inv = cmat[:, k].astype(jnp.float32)[:, None, None]
+    return ((parity_outs.astype(jnp.float32) - s) * inv).astype(
+        parity_outs.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q [B,Sq,H,hd]; k,v [B,Sk,KV,hd] -> [B,Sq,H,hd] (naive softmax)."""
     B, Sq, H, hd = q.shape

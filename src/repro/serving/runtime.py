@@ -79,6 +79,14 @@ from repro.serving.strategy import get_strategy
 # blocking ``get()`` wakes immediately — no idle polling, sub-ms shutdown
 _SHUTDOWN = object()
 
+# test hook for the batched multi-group decode drain (`_decode_touched`):
+# None = batch whenever >1 recoverable group shares a scheme and shape,
+# "batched" = route even a single group through the multigroup launch,
+# "pergroup" = always decode per group (the pre-fusion path).  The fused /
+# unfused differential test drives both settings through identical workloads
+# and asserts identical ServingReport reconstruction counts.
+_FORCE_DECODE: Optional[str] = None
+
 # not-passed marker for the legacy kwarg surface: any kwarg the caller
 # actually supplied is `is not _UNSET`, so spec-vs-kwargs conflict detection
 # needs no shadow table of defaults
@@ -812,8 +820,7 @@ class ParMFrontend:
                         qid not in info["outs"]:
                     continue        # voted out; _maybe_decode serves it
                 self.queries[qid].fulfill(out, "model")
-            for gid, info in touched.items():
-                self._maybe_decode(gid, info)
+            self._decode_touched(touched)
 
     def _on_parity_done(self, tag, key, out):
         gid, j = key
@@ -884,15 +891,16 @@ class ParMFrontend:
                 # uncorrectable: serve the suspect output rather than hang
                 q.fulfill(out, "model")
 
-    def _maybe_decode(self, gid, info):
-        """Called with lock held: reconstruct up to ``n_parities_arrived``
-        missing predictions (r=1 fast path: subtraction decoder).  A member
-        is missing when the group holds no (trustworthy) response for it —
-        a voted-out corrupt response leaves its member missing even though
-        the query may already be answered, so the decoder never feeds
-        known-bad data (or placeholder zeros) into a reconstruction."""
+    def _decode_plan(self, info):
+        """Decode decision for one group, with the lock held: returns
+        ``(missing, miss_mask, parity_avail)`` — or None when nothing
+        recoverable is still unanswered.  A member is missing when the group
+        holds no (trustworthy) response for it — a voted-out corrupt
+        response leaves its member missing even though the query may already
+        be answered, so the decoder never feeds known-bad data (or
+        placeholder zeros) into a reconstruction."""
         if not info["parity"]:
-            return
+            return None
         members = info["members"]
         g_scheme, g_r = info["scheme"], info["r"]
         miss_mask = np.array([m not in info["outs"] for m in members])
@@ -904,29 +912,49 @@ class ParMFrontend:
         missing = [m for m, miss in zip(members, miss_mask)
                    if miss and not self.queries[m].event.is_set()]
         if not missing:
-            return
+            return None
+        return missing, miss_mask, parity_avail
+
+    def _fulfill_clean(self, info, m, recon):
+        q = self.queries[m]
+        newly = not q.event.is_set()
+        q.fulfill(recon, "parity")
+        if newly and m in info["corrupt_m"]:
+            # this member's own response was voted out as corrupted;
+            # it was just served from a clean reconstruction instead
+            self.corrupted_corrected += 1
+
+    def _group_outs(self, info):
+        """Member outputs stacked [k, ...] (zeros at missing slots — masked
+        out of the decode math by the availability coefficients)."""
         any_out = next(iter(info["parity"].values()))
-        outs = np.stack([info["outs"].get(m, np.zeros_like(any_out))
-                         for m in members])
+        return np.stack([info["outs"].get(m, np.zeros_like(any_out))
+                         for m in info["members"]])
 
-        def fulfill_clean(m, recon):
-            q = self.queries[m]
-            newly = not q.event.is_set()
-            q.fulfill(recon, "parity")
-            if newly and m in info["corrupt_m"]:
-                # this member's own response was voted out as corrupted;
-                # it was just served from a clean reconstruction instead
-                self.corrupted_corrected += 1
+    def _is_fast_plan(self, info, plan):
+        """Does this group's decode land on the r=1 subtraction fast path
+        (the batchable ``decode_one`` shape)?"""
+        missing, miss_mask, _ = plan
+        return info["r"] == 1 and len(missing) == 1 and \
+            miss_mask.sum() == 1
 
-        if g_r == 1 and len(missing) == 1 and miss_mask.sum() == 1:
+    def _decode_group(self, info, plan):
+        """Per-group decode execution (r=1 fast path: subtraction decoder;
+        otherwise the scheme's general masked decode)."""
+        missing, miss_mask, parity_avail = plan
+        members = info["members"]
+        g_scheme, g_r = info["scheme"], info["r"]
+        outs = self._group_outs(info)
+        if self._is_fast_plan(info, plan):
             j = members.index(missing[0])
             if self.decode_fn is not None:
                 recon = self.decode_fn(info["parity"][0], outs, j)
             else:
                 recon = np.asarray(g_scheme.decode_one(
                     info["parity"][0], outs, j))
-            fulfill_clean(missing[0], recon)
+            self._fulfill_clean(info, missing[0], recon)
             return
+        any_out = next(iter(info["parity"].values()))
         parity_outs = np.stack([
             info["parity"].get(j, np.zeros_like(any_out))
             for j in range(g_r)])
@@ -934,7 +962,88 @@ class ParMFrontend:
             jnp.asarray(parity_outs), jnp.asarray(outs),
             jnp.asarray(miss_mask), jnp.asarray(parity_avail)))
         for m in missing:
-            fulfill_clean(m, recon[members.index(m)])
+            self._fulfill_clean(info, m, recon[members.index(m)])
+
+    def _maybe_decode(self, gid, info):
+        """Called with lock held: reconstruct up to ``n_parities_arrived``
+        missing predictions for ONE group (the single-group entry point —
+        parity arrivals; batch-atomic completions drain through
+        ``_decode_touched``)."""
+        del gid
+        plan = self._decode_plan(info)
+        if plan is not None:
+            self._decode_group(info, plan)
+
+    def _decode_touched(self, touched):
+        """Batched decode drain for a batch-atomic completion, with the lock
+        held: gather EVERY touched group's decode decision first, then
+        reconstruct all recoverable groups together — fast-path (r=1,
+        one-missing) groups sharing a scheme instance and output shape go
+        through ONE ``decode_one_many`` multigroup launch, general-path
+        groups sharing a scheme through one vmapped ``decode_many`` solve;
+        schemes without the batched surface (or a user ``decode_fn``, or
+        ``_FORCE_DECODE="pergroup"``) keep the exact per-group path."""
+        plans = []
+        for gid, info in touched.items():
+            plan = self._decode_plan(info)
+            if plan is not None:
+                plans.append((info, plan))
+        batch_min = 1 if _FORCE_DECODE == "batched" else 2
+        if _FORCE_DECODE == "pergroup" or len(plans) < batch_min:
+            for info, plan in plans:
+                self._decode_group(info, plan)
+            return
+        fast, general, rest = {}, {}, []
+        for info, plan in plans:
+            g_scheme = info["scheme"]
+            shape = next(iter(info["parity"].values())).shape
+            if self._is_fast_plan(info, plan) and self.decode_fn is None \
+                    and hasattr(type(g_scheme), "decode_one_many"):
+                fast.setdefault((id(g_scheme), shape), []).append(
+                    (info, plan))
+            elif hasattr(type(g_scheme), "decode_many"):
+                general.setdefault((id(g_scheme), shape), []).append(
+                    (info, plan))
+            else:
+                rest.append((info, plan))
+        for bucket in fast.values():
+            if len(bucket) < batch_min:
+                rest.extend(bucket)
+                continue
+            g_scheme = bucket[0][0]["scheme"]
+            idxs = [info["members"].index(plan[0][0])
+                    for info, plan in bucket]
+            parity_outs = np.stack([info["parity"][0]
+                                    for info, _ in bucket])
+            outs = np.stack([self._group_outs(info)
+                             for info, _ in bucket])
+            recons = np.asarray(g_scheme.decode_one_many(
+                jnp.asarray(parity_outs), jnp.asarray(outs),
+                np.asarray(idxs)))
+            for (info, plan), recon in zip(bucket, recons):
+                self._fulfill_clean(info, plan[0][0], recon)
+        for bucket in general.values():
+            if len(bucket) < batch_min:
+                rest.extend(bucket)
+                continue
+            g_scheme = bucket[0][0]["scheme"]
+            g_r = bucket[0][0]["r"]
+            any_out = next(iter(bucket[0][0]["parity"].values()))
+            parity_outs = np.stack([
+                np.stack([info["parity"].get(j, np.zeros_like(any_out))
+                          for j in range(g_r)]) for info, _ in bucket])
+            outs = np.stack([self._group_outs(info)
+                             for info, _ in bucket])
+            miss = np.stack([plan[1] for _, plan in bucket])
+            pa = np.stack([plan[2] for _, plan in bucket])
+            recons = np.asarray(g_scheme.decode_many(
+                jnp.asarray(parity_outs), jnp.asarray(outs), miss, pa))
+            for (info, plan), recon in zip(bucket, recons):
+                members = info["members"]
+                for m in plan[0]:
+                    self._fulfill_clean(info, m, recon[members.index(m)])
+        for info, plan in rest:
+            self._decode_group(info, plan)
 
     # ------------------------------------------------------------------
     def wait_all(self, timeout=60.0):

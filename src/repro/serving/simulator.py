@@ -121,6 +121,15 @@ _CHUNK = 1 << 15
 # take the fast path).  The bit-equality test runs both and compares.
 _FORCE_PATH: Optional[str] = None
 
+# test hook for the general loop's batch-decode drain: None/"batched" =
+# gather every touched group's reconstruction plan first, then complete them
+# (the DES twin of the frontend's one-launch multigroup decode — decode time
+# is still charged PER GROUP via decode_cost, so the drains are bit-equal);
+# "pergroup" = interleave plan and completion per group (the pre-fusion
+# path).  The fused/unfused differential test runs both and asserts
+# identical ServingReports.
+_FORCE_DECODE: Optional[str] = None
+
 
 @dataclass
 class SimConfig:
@@ -1133,30 +1142,41 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
         corrupt_members.pop(g, None)
         corrupt_parities.pop(g, None)
 
-    def maybe_reconstruct(g, t):
-        """Reconstruct every member the scheme can recover *right now*: the
-        shared ``recoverable_rows`` rule over (members whose response the
-        decoder does not hold, parities arrived) — the exact decision
-        ``ParMFrontend._maybe_decode`` takes (its miss rule is "no
+    def reconstruct_plan(g):
+        """Reconstruction decision for one group: the shared
+        ``recoverable_rows`` rule over (members whose response the decoder
+        does not hold, parities arrived) — the exact decision
+        ``ParMFrontend._decode_plan`` takes (its miss rule is "no
         trustworthy response recorded", NOT "query unanswered": an SLO- or
         eviction-answered member without a held response has no data to
-        decode with), so the two layers agree by construction."""
+        decode with), so the two layers agree by construction.  Returns
+        ``(info, rows)`` or None."""
         info = groups.get(g)
         if info is None:
-            return          # never-assembled (partial trailing) group: the
+            return None     # never-assembled (partial trailing) group: the
                             # runtime never encodes one, so no decode here
         mem = info["members"]
         miss = ~member_resp[mem]
         if not miss.any() or done[mem].all():
-            return
+            return None
         parity_avail = np.isfinite(info["parity_t"])
         if not parity_avail.any():
-            return
+            return None
         rows = recoverable_rows(info["schm"], miss, parity_avail)
         if not rows.any():
-            return
+            return None
+        return info, rows
+
+    def apply_reconstruction(info, rows, t):
+        """Complete every recoverable member of one planned group.  Decode
+        time is charged per group through the scheme's ``decode_cost`` hint
+        whether the group decodes alone or inside a batched drain — the
+        multigroup kernel's win is a LAUNCH-count win, which the timing
+        model does not resolve, so batched and per-group drains stay
+        bit-equal."""
         ready = t + cfg.decode_ms * decode_cost(info["schm"],
                                                 int(rows.sum()))
+        mem = info["members"]
         for j in np.nonzero(rows)[0]:
             qi = int(mem[int(j)])
             complete(qi, max(ready, arrival_t[qi]), by=1)
@@ -1165,6 +1185,30 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                 # now served from a clean reconstruction instead
                 corrupted["corrected"] += 1
                 corrupt_stash.pop(qi)
+
+    def maybe_reconstruct(g, t):
+        """Single-group reconstruction (plan + apply in one step)."""
+        plan = reconstruct_plan(g)
+        if plan is not None:
+            apply_reconstruction(plan[0], plan[1], t)
+
+    def reconstruct_groups(gids, t):
+        """Batch-decode drain: every group a finish event touched, decoded
+        together.  Gathers ALL groups' stacked reconstruction plans first —
+        the DES twin of the frontend's one-launch ``decode_one_many`` /
+        ``decode_many`` drain — then completes each at its own
+        ``decode_cost`` charge.  Groups are disjoint (a query belongs to one
+        group), so gather-then-apply completes exactly what interleaved
+        per-group calls would: ``_FORCE_DECODE="pergroup"`` pins that in the
+        differential test."""
+        if _FORCE_DECODE == "pergroup":
+            for g in gids:
+                maybe_reconstruct(g, t)
+            return
+        plans = [p for p in (reconstruct_plan(g) for g in gids)
+                 if p is not None]
+        for info, rows in plans:
+            apply_reconstruction(info, rows, t)
 
     arr_list = arrivals.tolist()
     ai = 0
@@ -1289,8 +1333,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                     # accepted and served as if clean — silently wrong,
                     # exactly what a non-detecting scheme always does
                     complete(qi, t)
-            for g in dict.fromkeys(touched):
-                maybe_reconstruct(g, t)
+            reconstruct_groups(dict.fromkeys(touched), t)
             dispatch(pool_name, t)
         elif kind == "slo":
             # Clipper baseline: answer with the default prediction at the

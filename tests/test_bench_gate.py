@@ -80,12 +80,58 @@ def test_gate_exact_threshold_boundary_is_inclusive():
     assert failures                             # one step past: trips
 
 
+def test_gate_map_informational_never_gates():
+    """A per-metric {"informational": true} override silences even suffix-
+    gated metrics — autotune block picks and other reported-only values."""
+    base = {"x_p999_ms": 100.0, "kernel_fused_autotune_block_b": 8}
+    gates = {"x_p999_ms": {"informational": True},
+             "kernel_fused_autotune_block_b": {"informational": True}}
+    rows, failures = compare({"x_p999_ms": 900.0,
+                              "kernel_fused_autotune_block_b": 16},
+                             base, threshold=0.25, gates=gates)
+    assert not failures
+    assert not any(r.startswith("x_p999_ms") for r in rows)
+
+
+def test_gate_map_per_metric_threshold():
+    """{"threshold": t} gates a metric at its own band — wide for wall-clock
+    kernel timings — and forces gating for metrics the suffix rules would
+    skip.  A gated metric missing from the current run still fails."""
+    base = {"kernel_fused_encode_forward_r1_us": 100.0}
+    gates = {"kernel_fused_encode_forward_r1_us": {"threshold": 3.0}}
+    _, failures = compare({"kernel_fused_encode_forward_r1_us": 390.0},
+                          base, threshold=0.25, gates=gates)
+    assert not failures                      # +290% inside the 300% band
+    _, failures = compare({"kernel_fused_encode_forward_r1_us": 410.0},
+                          base, threshold=0.25, gates=gates)
+    assert failures and "kernel_fused_encode_forward_r1_us" in failures[0]
+    _, failures = compare({}, base, threshold=0.25, gates=gates)
+    assert failures and "missing" in failures[0]
+
+
+def test_gate_map_absolute_max_bound():
+    """{"max": M} is an absolute bound on the current value — how the
+    fused/unfused time ratios pin fused <= unfused regardless of baseline
+    drift (a ratio metric's baseline value is itself noisy)."""
+    base = {"kernel_fused_encode_forward_r1_ratio": 0.2}
+    gates = {"kernel_fused_encode_forward_r1_ratio": {"max": 1.0}}
+    _, failures = compare({"kernel_fused_encode_forward_r1_ratio": 0.97},
+                          base, threshold=0.25, gates=gates)
+    assert not failures            # 4.8x the baseline ratio, still <= max
+    _, failures = compare({"kernel_fused_encode_forward_r1_ratio": 1.02},
+                          base, threshold=0.25, gates=gates)
+    assert failures and "absolute bound" in failures[0]
+    _, failures = compare({}, base, threshold=0.25, gates=gates)
+    assert failures and "missing" in failures[0]
+
+
 def _run_gate(tmp_path, current, baseline, *args, env_extra=None):
     import os
     cur, base = tmp_path / "cur.json", tmp_path / "base.json"
     for path, content in ((cur, current), (base, baseline)):
         path.write_text(content if isinstance(content, str)
-                        else json.dumps({"metrics": content}))
+                        else json.dumps(content if "metrics" in content
+                                        else {"metrics": content}))
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     # never inherit a real Actions summary file: the gate auto-appends to
     # $GITHUB_STEP_SUMMARY, and these deliberate pass/regress runs must
@@ -136,6 +182,61 @@ def test_gate_writes_markdown_step_summary(tmp_path):
                      env_extra={"GITHUB_STEP_SUMMARY": str(md2)})
     assert res2.returncode == 0
     assert "Bench gate" in md2.read_text()
+
+
+def test_gate_honors_baseline_gate_map_end_to_end(tmp_path):
+    """The CLI reads the per-metric override map from the BASELINE
+    document's top-level "gate" key: a ratio past its absolute max trips
+    (exit 1) while a 2x wall-clock move inside its wide band passes."""
+    baseline = {"metrics": {"kernel_multigroup_decode_ratio": 0.3,
+                            "kernel_multigroup_decode_us": 1000.0},
+                "gate": {"kernel_multigroup_decode_ratio": {"max": 1.0},
+                         "kernel_multigroup_decode_us": {"threshold": 3.0}}}
+    ok = _run_gate(tmp_path, {"kernel_multigroup_decode_ratio": 0.9,
+                              "kernel_multigroup_decode_us": 2000.0},
+                   baseline)
+    assert ok.returncode == 0, ok.stderr
+    trip = _run_gate(tmp_path, {"kernel_multigroup_decode_ratio": 1.4,
+                                "kernel_multigroup_decode_us": 2000.0},
+                     baseline)
+    assert trip.returncode == 1
+    assert "absolute bound" in trip.stderr
+    # a malformed gate map is "cannot run", not a silent un-gating
+    bad = dict(baseline, gate="not-a-map")
+    broken = _run_gate(tmp_path, {"kernel_multigroup_decode_ratio": 0.9,
+                                  "kernel_multigroup_decode_us": 2000.0},
+                      bad)
+    assert broken.returncode == 2
+
+
+def test_checked_in_baseline_gates_kernel_lane():
+    """The kernel bench lane (DESIGN.md §12): the checked-in baseline must
+    carry the kernel_* smoke metrics AND the gate map that pins the fused
+    paths — fused <= unfused locked by max-1.0 ratio bounds, wall-clocks
+    on a wide band, autotune picks informational."""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        doc = json.load(f)
+    metrics, gate = doc["metrics"], doc["gate"]
+    for r in (1, 2):
+        assert f"kernel_fused_encode_forward_r{r}_us" in metrics
+        assert f"kernel_unfused_encode_forward_r{r}_us" in metrics
+        ratio = f"kernel_fused_encode_forward_r{r}_ratio"
+        assert gate[ratio] == {"max": 1.0}
+        # the recorded baseline itself shows fused beating unfused
+        assert metrics[ratio] <= 1.0, (ratio, metrics[ratio])
+    assert gate["kernel_multigroup_decode_ratio"] == {"max": 1.0}
+    assert metrics["kernel_multigroup_decode_ratio"] <= 1.0
+    assert "kernel_pergroup_decode_us" in metrics
+    for backend in ("jnp", "pallas"):
+        assert f"kernel_parity_encode_{backend}_us" in metrics
+        assert f"kernel_parity_decode_{backend}_us" in metrics
+    for name, spec in gate.items():
+        assert name in metrics, f"gate entry {name} has no baseline metric"
+        if name.endswith("_us"):
+            assert spec.get("threshold", 0) >= 1.0, (name, spec)
+    for blk in ("block_b", "block_f"):
+        assert gate[f"kernel_fused_autotune_{blk}"] == \
+            {"informational": True}
 
 
 def test_checked_in_baseline_matches_smoke_metric_set():

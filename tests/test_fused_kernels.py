@@ -1,0 +1,270 @@
+"""The fused coded hot path (DESIGN.md §12): Pallas-vs-jnp-vs-ref
+equivalence for the fused encode→forward kernel and the batched multigroup
+decode, the scheme-level batched surfaces against their per-group
+equivalents on BOTH backends, the fusability routing in
+``core.parity.fused_parity_outputs``, and a ``_FORCE_DECODE`` differential
+case proving the batched decode drains serve bit-identical
+``ServingReport``s to the per-group drains in BOTH serving engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheme import LinearScheme, get_scheme
+from repro.kernels import ops, ref
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+def _close(got, want, dt=jnp.float32, mul=1.0):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dt) * mul, rtol=_tol(dt) * mul)
+
+
+# ------------------------------------------------- fused encode→forward ----
+
+@pytest.mark.parametrize("k,r,B,F,V,dt", [
+    (2, 1, 4, 512, 128, jnp.float32),
+    (3, 1, 5, 300, 130, jnp.float32),      # nothing 128-aligned
+    (2, 3, 8, 1024, 257, jnp.float32),     # trailing partial V block
+    (4, 2, 1, 129, 64, jnp.float32),       # trailing partial F block, B=1
+    (4, 2, 8, 1000, 100, jnp.bfloat16),
+])
+def test_fused_encode_forward_op(k, r, B, F, V, dt):
+    key = jax.random.PRNGKey(k * 97 + r * 13 + F)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (k, B, F), dt)
+    C = jax.random.normal(ks[1], (r, k), jnp.float32)
+    W = jax.random.normal(ks[2], (r, F, V), dt)
+    got = ops.fused_encode_forward_op(q, C, W)
+    want = ref.fused_encode_forward_ref(q, C, W)
+    # relative to the magnitude of a length-F*k reduction
+    _close(got, want, dt, mul=np.sqrt(F * k))
+    assert got.shape == (r, B, V)
+
+
+def test_fused_encode_forward_trailing_feature_shape():
+    """Image-shaped queries flatten to F inside the op."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 4, 6, 2))
+    C = jnp.asarray([[1.0, 2.0, 3.0]])
+    W = jax.random.normal(jax.random.PRNGKey(1), (1, 48, 10))
+    got = ops.fused_encode_forward_op(q, C, W)
+    want = ref.fused_encode_forward_ref(q.reshape(3, 2, -1), C, W)
+    _close(got, want, mul=16)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("name,r", [("sum", 1), ("sum", 2), ("learned", 2)])
+def test_scheme_encode_forward_matches_unfused(backend, name, r):
+    """scheme.encode_forward == scheme.encode then per-row matmul, on both
+    backends, for every LinearScheme-family member (learned overrides the
+    coefficient matrix but inherits the fused surface)."""
+    k, B, F, V = 3, 4, 50, 7
+    scheme = get_scheme(name, k=k, r=r, backend=backend)
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (k, B, F))
+    W = jax.random.normal(jax.random.PRNGKey(6), (r, F, V))
+    got = scheme.encode_forward(q, W)
+    enc = scheme.encode(q.reshape(k, B, F))
+    want = jnp.einsum("rbf,rfv->rbv", jnp.asarray(enc, jnp.float32),
+                      W.astype(jnp.float32))
+    _close(got, want, mul=F)
+    # a shared 2d first-layer matrix broadcasts across rows
+    got2 = scheme.encode_forward(q, W[0])
+    want2 = jnp.einsum("rbf,fv->rbv", jnp.asarray(enc, jnp.float32),
+                       W[0].astype(jnp.float32))
+    _close(got2, want2, mul=F)
+
+
+# ---------------------------------------------------- multigroup decode ----
+
+@pytest.mark.parametrize("G,k,B,V", [(1, 2, 1, 9), (5, 3, 4, 100),
+                                     (4, 4, 2, 257)])
+def test_multigroup_decode_op(G, k, B, V):
+    """One launch over G groups == G per-group subtraction decodes, for
+    every missing index and both shared and per-group coeffs."""
+    rng = np.random.default_rng(G * 7 + k)
+    po = jnp.asarray(rng.normal(size=(G, B, V)), jnp.float32)
+    outs = jnp.asarray(rng.normal(size=(G, k, B, V)), jnp.float32)
+    idxs = np.arange(G) % k                    # cycles every missing index
+    shared = jnp.arange(1.0, k + 1.0)
+    got = ops.multigroup_decode_op(po, outs, idxs, shared)
+    for g in range(G):
+        want = ops.parity_decode_op(po[g], outs[g], int(idxs[g]), shared)
+        _close(got[g], want, mul=k)
+    # per-group coefficient rows
+    cg = jnp.asarray(rng.normal(size=(G, k)), jnp.float32) + 2.0
+    got = ops.multigroup_decode_op(po, outs, idxs, cg)
+    for g in range(G):
+        want = ops.parity_decode_op(po[g], outs[g], int(idxs[g]), cg[g])
+        _close(got[g], want, mul=k)
+
+
+def test_multigroup_decode_op_matches_ref_and_unbatched():
+    G, k, V = 3, 2, 40
+    rng = np.random.default_rng(0)
+    po = jnp.asarray(rng.normal(size=(G, V)), jnp.float32)   # no batch axis
+    outs = jnp.asarray(rng.normal(size=(G, k, V)), jnp.float32)
+    idxs = np.array([0, 1, 0])
+    c = jnp.asarray([2.0, 3.0])
+    got = ops.multigroup_decode_op(po, outs, idxs, c)
+    assert got.shape == (G, V)
+    cg = np.broadcast_to(np.asarray(c), (G, k)).copy()
+    avail = cg * (np.arange(k)[None] != idxs[:, None])
+    inv = 1.0 / np.take_along_axis(cg, idxs[:, None], 1)
+    cmat = jnp.asarray(np.concatenate([avail, inv], 1))
+    want = ref.multigroup_decode_ref(po[:, None], outs[:, :, None], cmat)
+    _close(got, want[:, 0])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_scheme_decode_one_many_matches_decode_one(backend):
+    k, G, B, V = 4, 6, 3, 33
+    scheme = get_scheme("sum", k=k, r=1, backend=backend)
+    rng = np.random.default_rng(1)
+    po = jnp.asarray(rng.normal(size=(G, B, V)), jnp.float32)
+    outs = jnp.asarray(rng.normal(size=(G, k, B, V)), jnp.float32)
+    idxs = np.arange(G) % k
+    got = scheme.decode_one_many(po, outs, idxs)
+    for g in range(G):
+        _close(got[g], scheme.decode_one(po[g], outs[g], int(idxs[g])),
+               mul=k)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_scheme_decode_many_matches_decode(backend):
+    """Batched masked least-squares over G groups == per-group decode, for
+    r=2 with varied missing masks and a straggling parity row."""
+    k, r, B, V = 3, 2, 2, 11
+    scheme = get_scheme("sum", k=k, r=r, backend=backend)
+    rng = np.random.default_rng(2)
+    masks = np.array([[1, 0, 0], [0, 1, 1], [1, 1, 0], [0, 0, 1]], bool)
+    pa = np.array([[1, 1], [1, 1], [1, 1], [1, 0]], bool)
+    G = len(masks)
+    po = jnp.asarray(rng.normal(size=(G, r, B, V)), jnp.float32)
+    outs = jnp.asarray(rng.normal(size=(G, k, B, V)), jnp.float32)
+    got = scheme.decode_many(po, outs, masks, pa)
+    for g in range(G):
+        want = scheme.decode(po[g], outs[g], masks[g], pa[g])
+        _close(got[g], want, mul=8 * k)
+    # parity_avail defaults to all-arrived
+    got = scheme.decode_many(po, outs, masks)
+    for g in range(G):
+        want = scheme.decode(po[g], outs[g], masks[g])
+        _close(got[g], want, mul=8 * k)
+
+
+def test_batched_surface_is_linear_family_only():
+    """approxifer has its own decoder and replication is passthrough —
+    neither may expose the batched LinearScheme surface (the engines
+    feature-test with hasattr and fall back per-group)."""
+    for name in ("approxifer", "replication"):
+        scheme = get_scheme(name, k=2, r=2)
+        assert not hasattr(type(scheme), "decode_one_many"), name
+        assert not hasattr(type(scheme), "decode_many"), name
+    assert hasattr(type(get_scheme("learned", k=2)), "decode_one_many")
+
+
+# --------------------------------------------------- fusability routing ----
+
+def test_fused_parity_outputs_linear_and_mlp():
+    from repro.core import parity
+    from repro.models.cnn import init_mlp, mlp_fwd
+    from repro.models.linear import init_linear, linear_fwd
+    k, r, B, F, V = 2, 2, 4, 24, 5
+    scheme = get_scheme("sum", k=k, r=r)
+    q = jax.random.normal(jax.random.PRNGKey(0), (k, B, F))
+    for fwd, pp in (
+            (linear_fwd, [init_linear(jax.random.PRNGKey(j), F, V)
+                          for j in range(r)]),
+            (mlp_fwd, [init_mlp(jax.random.PRNGKey(j), F, hidden=(16,),
+                                n_out=V) for j in range(r)])):
+        fused = parity.fused_parity_outputs(scheme, q, pp, fwd)
+        enc = scheme.encode(q)
+        want = jnp.stack([fwd(pp[j], enc[j]) for j in range(r)])
+        _close(fused, want, mul=F)
+        # ... and the fused path was actually taken
+        parity._FORCE_FUSED = True
+        try:
+            _close(parity.fused_parity_outputs(scheme, q, pp, fwd), want,
+                   mul=F)
+        finally:
+            parity._FORCE_FUSED = None
+
+
+def test_fused_parity_outputs_fallback_and_force():
+    """Custom forwards never silently fuse; _FORCE_FUSED=False disables
+    fusion even for fusable pairs; =True raises on non-fusable ones."""
+    from repro.core import parity
+    from repro.models.linear import init_linear, linear_fwd
+    k, F, V = 2, 6, 3
+    scheme = get_scheme("sum", k=k, r=1)
+    q = jax.random.normal(jax.random.PRNGKey(1), (k, 3, F))
+    pp = [init_linear(jax.random.PRNGKey(0), F, V)]
+
+    def custom_fwd(p, x):                     # linear-shaped but not the
+        return x @ p["w"]                     # canonical chain
+
+    want = jnp.stack([custom_fwd(pp[0], scheme.encode(q)[0])])
+    _close(parity.fused_parity_outputs(scheme, q, pp, custom_fwd), want)
+    parity._FORCE_FUSED = True
+    try:
+        with pytest.raises(ValueError, match="not fusable"):
+            parity.fused_parity_outputs(scheme, q, pp, custom_fwd)
+        # approxifer's custom encode is not the LinearScheme projection
+        apx = get_scheme("approxifer", k=k, r=1)
+        with pytest.raises(ValueError, match="not fusable"):
+            parity.fused_parity_outputs(apx, q, pp, linear_fwd)
+    finally:
+        parity._FORCE_FUSED = None
+    parity._FORCE_FUSED = False
+    try:
+        want = jnp.stack([linear_fwd(pp[0], scheme.encode(q)[0])])
+        _close(parity.fused_parity_outputs(scheme, q, pp, linear_fwd), want)
+    finally:
+        parity._FORCE_FUSED = None
+
+
+# ------------------------------------- batched-vs-pergroup differential ----
+
+def _force_decode(mode):
+    from repro.serving import runtime, simulator
+    runtime._FORCE_DECODE = mode
+    simulator._FORCE_DECODE = mode
+
+
+@pytest.mark.parametrize("scheme,k,r,slow_main,expected", [
+    ("sum", 2, 1, (0,), 1),
+    ("sum", 2, 2, (0, 1), 2),      # r=2: the decode_many lstsq surface
+])
+def test_batched_decode_differential_both_engines(scheme, k, r, slow_main,
+                                                  expected):
+    """Forcing every drain through the batched decode surface
+    (``_FORCE_DECODE="batched"`` lowers the drain's batch threshold to 1)
+    vs forcing per-group decodes must produce identical ServingReports in
+    BOTH engines — the serving-layer analogue of the kernel equivalence
+    sweeps above (reconstruction counts AND completion attribution)."""
+    from tests.test_differential import (_make_spec, _pattern_scenario,
+                                         _run_runtime, _run_sim)
+    scen = _pattern_scenario(k, slow_main, ())
+    spec, W = _make_spec(scheme, k, r, scen)
+    reports = {}
+    for mode in ("batched", "pergroup"):
+        _force_decode(mode)
+        try:
+            reports[mode] = {"sim": _run_sim(spec, n=k),
+                             "rt": _run_runtime(spec, W, n=k)}
+        finally:
+            _force_decode(None)
+    for eng in ("sim", "rt"):
+        b, p = reports["batched"][eng], reports["pergroup"][eng]
+        assert b["reconstructions"] == p["reconstructions"] == expected, \
+            (eng, b, p)
+        assert b["completed_by"] == p["completed_by"], (eng, b, p)
+        assert b.get("cancelled_queries") == p.get("cancelled_queries")
+    # and the engines agree with each other, per DESIGN.md §1
+    assert (reports["batched"]["sim"]["reconstructions"] ==
+            reports["batched"]["rt"]["reconstructions"])
