@@ -337,6 +337,34 @@ def bench_ci_smoke():
                 simulate(SimConfig(n_queries=n, qps=util / 100.0 * capacity,
                                    m=12, k=2, seed=1),
                          "parm", scheme=scheme))
+    # coded LM serving (serving/generation.py, DESIGN.md §13): token-level
+    # DES for a big config, service time calibrated from launch/roofline.py
+    # (decode_token_cost), below the capacity knee so the coded and uncoded
+    # medians match.  The gated ratios lock the acceptance criterion: coded
+    # generation's inter-token p999 beats uncoded equal-resources at the
+    # same median, under both episodic straggler scenarios.
+    from repro.configs.base import get_config
+    from repro.serving.generation import GenerationSpec, deploy_lm
+    lm_cfg = get_config("qwen3-moe-235b-a22b")
+    for scen in ("bursty", "storm"):
+        lm = GenerationSpec(cfg=lm_cfg, k=4, r=1, m=12, utilization=0.3,
+                            kv_len=4096, tp=8, scenario=scen)
+        coded = deploy_lm(lm, engine="sim").replay(n_tokens=n, seed=1)
+        uncoded = deploy_lm(lm.replace(strategy="equal_resources"),
+                            engine="sim").replay(n_tokens=n, seed=1)
+        out[f"smoke_lm_{scen}_coded_p50_ms"] = round(
+            coded.inter_token_p50_ms, 3)
+        out[f"smoke_lm_{scen}_coded_p999_ms"] = round(
+            coded.inter_token_p999_ms, 3)
+        out[f"smoke_lm_{scen}_uncoded_p999_ms"] = round(
+            uncoded.inter_token_p999_ms, 3)
+        out[f"smoke_lm_{scen}_tokens_per_s"] = round(coded.tokens_per_s, 1)
+        out[f"smoke_lm_{scen}_reconstructed_steps"] = \
+            coded.reconstructed_steps
+        out[f"smoke_lm_{scen}_p999_ratio"] = round(
+            coded.inter_token_p999_ms / uncoded.inter_token_p999_ms, 4)
+        out[f"smoke_lm_{scen}_median_ratio"] = round(
+            coded.inter_token_p50_ms / uncoded.inter_token_p50_ms, 4)
     # the 10M-query acceptance point (ISSUE: seeded sum/r=1 on calm must
     # finish < 30 s): p999 is bit-stable and latency-gated; events/sec is
     # machine-dependent, so regression_check gates it as a LOWER bound

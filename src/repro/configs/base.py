@@ -59,6 +59,13 @@ class ArchConfig:
     n_modality_tokens: int = 0       # stubbed frontend: patches / audio frames
     sliding_window: int = 0          # 0 = full attention
 
+    # --- execution backend ---
+    # "jnp": XLA online-softmax paths (default, runs everywhere);
+    # "pallas": route prefill/decode attention through the Pallas TPU
+    # kernels (interpret mode off-TPU), falling back to XLA where the
+    # kernel lacks a feature (q_offset prefill, non-causal cross-attn).
+    attn_backend: str = "jnp"
+
     dtype: str = "bfloat16"
 
     # ------------------------------------------------------------------

@@ -62,7 +62,9 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, block_k=512,
                      interpret=False):
-    """q [B,H,hd]; caches [B,S,KV,hd]; pos scalar int32. Returns [B,H,hd]."""
+    """q [B,H,hd]; caches [B,S,KV,hd]; pos scalar int32 or [B] per-row
+    positions (slot-batched decode: each batch row is an independent stream
+    at its own position). Returns [B,H,hd]."""
     B, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     rep = H // KV
@@ -73,11 +75,15 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=512,
         _decode_kernel, scale=hd ** -0.5, block_k=block_k, n_kv_blocks=nk,
         kv_heads=KV, rep=rep)
 
+    # A scalar pos broadcasts to [B]; each grid row b then streams its own
+    # pos_ref[0], so per-row positions reuse the same kernel body.
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
     return pl.pallas_call(
         kernel,
         grid=(B, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda b, j: (0,)),                 # pos
+            pl.BlockSpec((1,), lambda b, j: (b,)),                 # pos
             pl.BlockSpec((1, H, hd), lambda b, j: (b, 0, 0)),      # q
             pl.BlockSpec((1, block_k, KV, hd), lambda b, j: (b, j, 0, 0)),
             pl.BlockSpec((1, block_k, KV, hd), lambda b, j: (b, j, 0, 0)),
@@ -90,4 +96,4 @@ def decode_attention(q, k_cache, v_cache, pos, *, block_k=512,
             pltpu.VMEM((H, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(jnp.asarray(pos, jnp.int32)[None], q, k_cache, v_cache)
+    )(pos, q, k_cache, v_cache)

@@ -135,3 +135,90 @@ def active_param_count(cfg, n_params):
     total_experts = n_moe_layers * cfg.n_experts * expert_p
     active_experts = n_moe_layers * cfg.moe_top_k * expert_p
     return n_params - total_experts + active_experts
+
+
+# --------------------------------------------------------------------------
+# Token-level decode service-time model (coded LM serving calibration)
+# --------------------------------------------------------------------------
+def _layer_counts(cfg):
+    """(n_attn_layers, n_mamba_layers) from the superblock plan."""
+    if cfg.attn_every:                  # hybrid: one attn layer per period
+        n_periods = cfg.n_layers // cfg.period
+        return n_periods, cfg.n_layers - n_periods
+    if cfg.family == "ssm":
+        return 0, cfg.n_layers
+    return cfg.n_layers, 0
+
+
+def estimate_param_count(cfg):
+    """Parameter count from config arithmetic alone — no init, no dry-run.
+
+    Close enough for a roofline service-time model of the big configs
+    (qwen3_moe_235b, jamba_1_5_large_398b, mamba2_780m) where materialising
+    params to count them is exactly what we cannot afford on CPU."""
+    D, V = cfg.d_model, cfg.vocab
+    n_attn, n_mamba = _layer_counts(cfg)
+    p = V * D                                        # embedding
+    if not cfg.tie_embeddings:
+        p += D * V                                   # lm_head
+    if n_attn and cfg.n_heads:
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        p += n_attn * (D * H * hd + 2 * D * KV * hd + H * hd * D)
+    if n_mamba:
+        d_inner = cfg.ssm_expand * D
+        # in/out projections dominate; conv/dt/A/D terms are noise at scale
+        p += n_mamba * 3 * D * d_inner
+    # ffn: moe layers carry n_experts (+shared) expert MLPs + router,
+    # the rest carry a dense (SwiGLU) MLP
+    n_ffn = cfg.n_layers if not (cfg.family == "ssm" and not cfg.attn_every) \
+        else 0
+    if cfg.n_experts:
+        n_moe = cfg.n_layers // cfg.moe_every
+        expert_p = 3 * D * cfg.moe_d_ff
+        p += n_moe * (cfg.n_experts + cfg.n_shared_experts) * expert_p
+        p += n_moe * D * cfg.n_experts               # router
+        n_dense = n_ffn - n_moe
+    else:
+        n_dense = n_ffn
+    if cfg.d_ff:
+        p += n_dense * 3 * D * cfg.d_ff
+    return p
+
+
+def kv_cache_bytes(cfg, kv_len, batch=1):
+    """Decode-step KV traffic: every cached K/V byte is read once per token."""
+    n_attn, _ = _layer_counts(cfg)
+    S = min(kv_len, cfg.sliding_window) if cfg.sliding_window else kv_len
+    bytes_per = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    cache = 0
+    if n_attn and cfg.n_heads:
+        KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cache = n_attn * 2 * S * KV * hd * bytes_per * batch
+    if cfg.ssm_state:
+        _, n_mamba = _layer_counts(cfg)
+        d_inner = cfg.ssm_expand * cfg.d_model
+        n_heads_ssm = max(1, d_inner // cfg.ssm_head_dim)
+        cache += n_mamba * n_heads_ssm * cfg.ssm_state * cfg.ssm_head_dim \
+            * 4 * batch                              # fp32 SSM state
+    return cache
+
+
+def decode_token_cost(cfg, *, n_params=None, batch=1, kv_len=0, tp=1):
+    """Seconds per decode step (one token per active stream).
+
+    Autoregressive decode at small batch is memory-bound: every active
+    parameter and every cached KV byte streams HBM->chip once per step, so
+
+        t = (active_param_bytes / tp + kv_bytes) / HBM_BW
+
+    with a compute-term floor for large batch.  ``tp`` is the tensor-
+    parallel degree (params shard; the per-chip KV slice stays resident but
+    each chip still reads its full shard every step)."""
+    if n_params is None:
+        n_params = estimate_param_count(cfg)
+    active = active_param_count(cfg, n_params)
+    bytes_per = 2 if cfg.dtype in ("bfloat16", "float16") else 4
+    mem_s = (active * bytes_per / tp
+             + kv_cache_bytes(cfg, kv_len, batch) / tp) / HBM_BW
+    comp_s = model_flops(cfg, batch, active_params=active) / (tp * PEAK_FLOPS)
+    return max(mem_s, comp_s)

@@ -74,6 +74,18 @@ def apply_rope(x, cos, sin):
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
 
 
+def apply_rope_rows(x, cos, sin):
+    """x [B, 1, H, hd]; cos/sin [B, hd//2] — one angle per batch row.
+
+    The per-slot decode path: each cache slot sits at its own position, so
+    the rotation varies along batch instead of sequence."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, None, None, :].astype(x.dtype)
+    s = sin[:, None, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
 # --------------------------------------------------------------------------
 # Attention (online-softmax KV-block scan)
 # --------------------------------------------------------------------------
@@ -227,7 +239,9 @@ _flash_core.defvjp(_flash_fwd, _flash_bwd)
 
 def attention_decode_xla(q, k_cache, v_cache, pos, *, window=0):
     """Single-token decode attention. q [B,1,H,hd]; caches [B,S,KV,hd];
-    pos [] current position (number of valid cached tokens is pos+1).
+    pos [] current position (number of valid cached tokens is pos+1), or
+    [B] per-row positions for slot-batched decode (each batch row is an
+    independent stream at its own position).
 
     With a sliding window the cache is a ring buffer of size ``window``; the
     mask then covers every slot already written.
@@ -246,11 +260,18 @@ def attention_decode_xla(q, k_cache, v_cache, pos, *, window=0):
     s = jnp.einsum("bgrd,bkgd->bgrk", qg * scale, k_cache,
                    preferred_element_type=jnp.float32)     # [B,KV,rep,S]
     kpos = jnp.arange(S)
-    if window:
-        valid = kpos < jnp.minimum(pos + 1, S)      # ring buffer: slots written
+    if jnp.ndim(pos):                               # per-row positions [B]
+        if window:
+            valid = kpos[None, :] < jnp.minimum(pos + 1, S)[:, None]
+        else:
+            valid = kpos[None, :] <= pos[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     else:
-        valid = kpos <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        if window:
+            valid = kpos < jnp.minimum(pos + 1, S)  # ring buffer: slots written
+        else:
+            valid = kpos <= pos
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -307,14 +328,25 @@ def _qkv(cfg, p, xq, xkv):
     return q, k, v
 
 
-def self_attention_fwd(cfg, p, x, rope_cs, *, window=0, q_offset=0):
-    """Full/causal self attention for train & prefill. Returns (out, (k, v))."""
+def self_attention_fwd(cfg, p, x, rope_cs, *, window=0, q_offset=0,
+                       backend=None):
+    """Full/causal self attention for train & prefill. Returns (out, (k, v)).
+
+    ``backend`` overrides ``cfg.attn_backend``: "pallas" routes through the
+    Pallas flash-attention kernel where it covers the case (causal,
+    q_offset == 0); otherwise — and always for "jnp" — the XLA
+    online-softmax path runs."""
     q, k, v = _qkv(cfg, p, x, x)
     cos, sin = rope_cs
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    o = flash_attention_xla(q, k, v, causal=True, window=window,
-                            q_offset=q_offset)
+    backend = backend or getattr(cfg, "attn_backend", "jnp")
+    if backend == "pallas" and not q_offset:
+        from repro.kernels import ops as kernel_ops
+        o = kernel_ops.flash_attention_op(q, k, v, causal=True, window=window)
+    else:
+        o = flash_attention_xla(q, k, v, causal=True, window=window,
+                                q_offset=q_offset)
     B, S, H, hd = o.shape
     return o.reshape(B, S, H * hd) @ p["wo"], (k, v)
 
@@ -338,19 +370,45 @@ def cross_attention_fwd(cfg, p, x, kv_or_embeds, *, from_cache=False):
     return o.reshape(B, Sq, H * hd) @ p["wo"], (k, v)
 
 
-def self_attention_decode(cfg, p, x, cache, pos, rope_cs, *, window=0):
+def self_attention_decode(cfg, p, x, cache, pos, rope_cs, *, window=0,
+                          backend=None):
     """One-token decode. x [B,1,D]; cache {'k','v'} ring buffers.
+
+    ``pos`` is scalar (whole batch at one position) or [B] (slot-batched
+    streams, each at its own position — ``rope_cs`` then holds per-row
+    tables [B, hd//2]).  ``backend`` as in :func:`self_attention_fwd`.
 
     Returns (out, new_cache)."""
     q, k, v = _qkv(cfg, p, x, x)
     cos, sin = rope_cs            # tables for the single position, [1, hd//2]
-    q = apply_rope(q, cos, sin)
-    k = apply_rope(k, cos, sin)
+    vector = bool(jnp.ndim(pos))
+    if vector:
+        q = apply_rope_rows(q, cos, sin)
+        k = apply_rope_rows(k, cos, sin)
+    else:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
     S = cache["k"].shape[1]
     slot = (pos % S) if window else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-    o = attention_decode_xla(q, k_cache, v_cache, pos, window=window)
+    if vector:
+        # Per-row slot write.  jnp.where keeps untouched rows bit-identical
+        # (no arithmetic on them), which the slot-isolation guarantee of the
+        # continuous-batching engine relies on.
+        sel = (jnp.arange(S)[None, :] == slot[:, None])[:, :, None, None]
+        k_cache = jnp.where(sel, k, cache["k"])
+        v_cache = jnp.where(sel, v, cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                      axis=1)
+    backend = backend or getattr(cfg, "attn_backend", "jnp")
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        o = kernel_ops.decode_attention_op(q[:, 0], k_cache, v_cache, pos)
+        o = o[:, None].astype(q.dtype)
+    else:
+        o = attention_decode_xla(q, k_cache, v_cache, pos, window=window)
     B, _, H, hd = o.shape
     out = o.reshape(B, 1, H * hd) @ p["wo"]
     return out, {"k": k_cache, "v": v_cache}

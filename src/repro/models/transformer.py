@@ -312,11 +312,20 @@ def prefill(cfg, params, tokens=None, embeds=None, cross_embeds=None,
 
 def decode_step(cfg, params, cache, pos, token=None, embed=None):
     """One decode step at position ``pos`` (0-based, == #tokens already in
-    cache). Returns (logits_f32 [B,1,V], new_cache)."""
+    cache). ``pos`` may be a scalar (whole batch at one position) or a [B]
+    vector of per-row positions — the slot-batched continuous-decoding path,
+    where each batch row is an independent stream. Returns
+    (logits_f32 [B,1,V], new_cache)."""
     x = _embed(cfg, params, token, embed)
     hd = cfg.resolved_head_dim if cfg.n_heads else 0
-    rope = (L.rope_tables(jnp.full((1,), pos), hd, cfg.rope_theta)
-            if hd else (None, None))
+    if jnp.ndim(pos):
+        # rope tables per batch row: [B, hd//2], consumed by the
+        # apply_rope_rows branch inside self_attention_decode
+        rope = (L.rope_tables(pos, hd, cfg.rope_theta)
+                if hd else (None, None))
+    else:
+        rope = (L.rope_tables(jnp.full((1,), pos), hd, cfg.rope_theta)
+                if hd else (None, None))
     ctx = {"rope": rope, "window": cfg.sliding_window, "cross_embeds": None,
            "collect_cache": False, "cache_len": 0}
     x, new_caches = _stack_decode(cfg, params["blocks"], cache, x, pos, ctx,

@@ -373,3 +373,12 @@ def deploy(spec: DeploymentSpec, engine: str = "threads") -> Session:
     if engine == "sim":
         return SimSession(spec)
     raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+
+
+def deploy_lm(spec, engine: str = "threads"):
+    """Generation sibling of ``deploy``: takes a ``GenerationSpec`` and
+    returns a coded LM serving session (token-level continuous batching,
+    per-step parity reconstruction — ``repro.serving.generation``).  Lazy
+    import so one-shot deployments never pay for the generation stack."""
+    from repro.serving.generation import deploy_lm as _deploy_lm
+    return _deploy_lm(spec, engine)

@@ -150,6 +150,15 @@ class ServingReport(Mapping):
     # "median_ms", "p999_ms", "slo_ms", "slo_violations"}.  Empty for
     # single-tenant runs; hash=False for the same reason as completed_by.
     per_tenant: Dict[str, dict] = field(default_factory=dict, hash=False)
+    # per-token generation metrics (serving/generation.py, DESIGN.md §13):
+    # for an LM run a "completion" is ONE decode step of one stream, so
+    # median/p999 above ARE inter-token latencies; these fields surface
+    # them under their serving-facing names plus the aggregate decode rate.
+    # All defaulted — one-shot runs are unaffected.
+    tokens_per_s: float = 0.0
+    inter_token_p50_ms: float = float("nan")
+    inter_token_p999_ms: float = float("nan")
+    reconstructed_steps: int = 0
 
     # -- Mapping protocol: old ``stats()["p999_ms"]`` call sites keep
     # working.  The view is exactly the dataclass fields plus the derived
