@@ -58,6 +58,12 @@ map)::
         --json benchmarks/BENCH_baseline.json
     PYTHONPATH=src python -m benchmarks.kernels_bench --smoke \
         --json benchmarks/BENCH_baseline.json
+    PYTHONPATH=src python -m benchmarks.accuracy --smoke \
+        --json benchmarks/BENCH_baseline.json
+
+The ``acc_unavail_*`` set from the accuracy lane is informational (gated
+via the ``gate`` map) and additionally rendered as a cross-scheme A_d
+ranking table in the step summary (``accuracy_ranking_table``).
 """
 from __future__ import annotations
 
@@ -147,6 +153,37 @@ def markdown_table(rows, failures, threshold: float) -> str:
     return "\n".join(lines) + "\n"
 
 
+def accuracy_ranking_table(current: dict) -> str:
+    """GitHub-flavored markdown ranking of the coding schemes by degraded
+    accuracy, from the ``acc_unavail_<scheme>_Ad`` metrics the accuracy
+    smoke lane (``benchmarks.accuracy --smoke``) merges into BENCH_ci.json.
+
+    These metrics are informational in the gate (accuracy at smoke scale
+    moves with training noise), so they never appear in ``compare``'s rows
+    — this renders them as their own section of the step summary instead.
+    Returns the empty string when the accuracy lane contributed nothing."""
+    prefix, suffix = "acc_unavail_", "_Ad"
+    ad = {name[len(prefix):-len(suffix)]: val
+          for name, val in current.items()
+          if name.startswith(prefix) and name.endswith(suffix)}
+    if not ad:
+        return ""
+    lines = ["## Accuracy under unavailability — A_d scheme ranking"]
+    a_a = current.get("acc_unavail_Aa")
+    if a_a is not None:
+        lines.append(f"Available accuracy A_a = {a_a:.3f}; A_d scores the "
+                     "reconstructed predictions with one unavailable "
+                     "member per coding group (informational — not gated).")
+    lines.append("")
+    lines.append("| rank | scheme | A_d | vs best |")
+    lines.append("|---:|---|---:|---:|")
+    best = max(ad.values())
+    ranked = sorted(ad.items(), key=lambda kv: (-kv[1], kv[0]))
+    for i, (name, val) in enumerate(ranked, 1):
+        lines.append(f"| {i} | `{name}` | {val:.3f} | {val - best:+.3f} |")
+    return "\n".join(lines) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_ci.json")
@@ -188,6 +225,9 @@ def main():
     if md_path:
         with open(md_path, "a") as f:
             f.write(markdown_table(rows, failures, args.threshold))
+            ranking = accuracy_ranking_table(metrics["current"])
+            if ranking:
+                f.write("\n" + ranking)
     if failures:
         print(f"\n# BENCH REGRESSION ({len(failures)} metric(s) beyond "
               f"{args.threshold:.0%}):", file=sys.stderr)

@@ -28,6 +28,39 @@ def save(path, params, step=None, extra=None):
     np.savez(path, __meta__=json.dumps(meta), **arrs)
 
 
+def weighted_merge(params_list, weights_list, eps=1e-12):
+    """Leaf-wise weighted average of k structurally-identical pytrees:
+
+        merged_leaf = sum_i w_i * leaf_i / (sum_i w_i + eps)
+
+    ``weights_list`` holds one weight pytree per member (same structure as
+    the params; leaves broadcastable against the params leaves — per-element
+    Fisher diagonals, or scalars for a plain convex combination).  This is
+    the merge substrate for Fisher-averaged parity provisioning
+    (``repro.core.fisher``): identical members with any positive weights
+    merge to (numerically) the members themselves."""
+    import jax.numpy as jnp
+    assert len(params_list) == len(weights_list) and params_list
+    leaves0, treedef = _flatten(params_list[0])
+    stacked = [jax.tree.flatten(p)[0] for p in params_list]
+    wstacked = [jax.tree.flatten(w)[0] for w in weights_list]
+    assert all(len(s) == len(leaves0) for s in stacked), "leaf count mismatch"
+    assert all(len(s) == len(leaves0) for s in wstacked), \
+        "weight leaf count mismatch"
+    out = []
+    for li in range(len(leaves0)):
+        num, den = None, None
+        for p_leaves, w_leaves in zip(stacked, wstacked):
+            leaf = jnp.asarray(p_leaves[li], jnp.float32)
+            w = jnp.broadcast_to(jnp.asarray(w_leaves[li], jnp.float32),
+                                 leaf.shape)
+            num = w * leaf if num is None else num + w * leaf
+            den = w if den is None else den + w
+        dtype = jnp.asarray(leaves0[li]).dtype
+        out.append((num / (den + eps)).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
 def load(path, like):
     """Restore into the structure of ``like`` (shape/dtype verified)."""
     import jax.numpy as jnp

@@ -48,7 +48,8 @@ from itertools import combinations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheme import register_scheme, _check_backend
+from repro.core.scheme import (Capabilities, _check_backend,
+                               _deprecated_flag, register_scheme)
 
 def chebyshev_nodes(n: int) -> np.ndarray:
     """n Chebyshev points of the first kind on (-1, 1), decreasing."""
@@ -111,15 +112,28 @@ class ApproxIFERScheme:
     name: str = "approxifer"
     err_tol: float = 100.0
 
-    # no parity model is trained: the deployed model serves the encoded
-    # queries too (train_parity_models returns the deployed params)
-    model_agnostic = True
-    # the decoder can vote out grossly erroneous responses when the group
-    # holds surplus responses (see flag_errors)
-    detects_errors = True
-    # recoverability is a response COUNT (arrived >= k), not a fixed mask
-    # rule: decode arity adapts to whatever arrived (see recoverable)
-    dynamic_arity = True
+    # legacy attribute spellings of the capability flags: readable one
+    # release with a DeprecationWarning steering toward
+    # scheme_capabilities(scheme)
+    model_agnostic = _deprecated_flag("model_agnostic", True)
+    detects_errors = _deprecated_flag("detects_errors", True)
+    dynamic_arity = _deprecated_flag("dynamic_arity", True)
+
+    def capabilities(self) -> Capabilities:
+        # model_agnostic: no parity model is trained — the deployed model
+        # serves the encoded queries too; detects_errors: the decoder votes
+        # out grossly erroneous responses when the group holds surplus ones
+        # (see flag_errors); dynamic_arity: recoverability is a response
+        # COUNT (arrived >= k), not a fixed mask rule (see recoverable)
+        return Capabilities(model_agnostic=True, detects_errors=True,
+                            dynamic_arity=True)
+
+    def provision_parity(self, deployed_params, ctx):
+        """No parity training: the deployed model itself serves the encoded
+        queries (the decoder re-interpolates its outputs), so the "parity
+        models" are r references to the deployed params."""
+        del ctx
+        return [deployed_params] * self.r
 
     def __post_init__(self):
         _check_backend(self.backend)

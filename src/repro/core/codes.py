@@ -144,20 +144,16 @@ class LinearDecoder:
 
 
 def make_code(k, r=1, kind="sum"):
-    """Deprecated: resolve codes through the scheme registry instead ::
+    """REMOVED (PR-1-era shim, deprecated for nine PRs): resolve codes
+    through the scheme registry instead ::
 
         from repro.core.scheme import get_scheme
-        scheme = get_scheme("sum", k=k, r=r)
+        scheme = get_scheme("sum", k=k, r=r)   # or "concat", ...
 
-    Kept as a shim for old call sites; returns the legacy
-    ``(encoder, decoder)`` pair."""
-    import warnings
-    warnings.warn(
-        "make_code() is deprecated; use repro.core.scheme.get_scheme() — "
-        "schemes carry encode/decode/coeffs on one object and support "
-        "backend selection", DeprecationWarning, stacklevel=2)
-    if kind == "sum":
-        return SumEncoder(k, r), LinearDecoder(k, r)
-    if kind == "concat":
-        return ConcatEncoder(k, r), LinearDecoder(k, 1)
-    raise ValueError(kind)
+    — schemes carry encode/decode/coeffs on one object and support backend
+    selection.  Raises ``TypeError`` with this migration message."""
+    raise TypeError(
+        f"make_code(k={k}, r={r}, kind={kind!r}) was removed; use "
+        f"repro.core.scheme.get_scheme({kind!r}, k={k}, r={r}) — schemes "
+        f"carry encode/decode/coeffs on one object and support backend "
+        f"selection")

@@ -1,0 +1,138 @@
+"""Fisher-averaged parity models: training-free provisioning by checkpoint
+merging (Erasure Coded Neural Network Inference via Fisher Averaging,
+arXiv:2409.01420; PAPERS.md).
+
+ParM trains a parity model by distillation (paper §3.3).  The Fisher line
+observes that when the k deployed members are themselves neural checkpoints,
+a parity model can be *merged* instead of trained: take the
+Fisher-information-weighted average of the member checkpoints,
+
+    theta*_j  =  ( sum_i  c_ji * F_i (.) theta_i )
+                 / ( sum_i  c_ji * F_i )            (leaf-wise, elementwise)
+
+where F_i is member i's diagonal Fisher — the expected squared gradient of
+its own log-likelihood, estimated from a small calibration batch — and c_ji
+are the parity row's combination weights.  Parameters a member is confident
+about (high curvature) dominate the merge; zero gradient steps run.
+
+``FisherScheme`` packages this behind the scheme-owned provisioning API
+(DESIGN.md §14):
+
+* **encode / decode** — the plain linear output code, with the Vandermonde
+  coefficient rows normalised to sum to 1 (row-stochastic).  Row
+  normalisation keeps the code MDS (each row is a positive rescale of a
+  Vandermonde row) while making every parity query a *convex combination*
+  of the members — the merged model is evaluated in-distribution rather
+  than at k-times-scaled inputs, which is what makes the untrained merged
+  parity model accurate.
+* **provision_parity** — computes each member's diagonal Fisher over
+  ``calib_n`` calibration samples from ``ctx.x_train`` and merges leaf-wise
+  through ``repro.checkpoint.io.weighted_merge``.  ``deployed_params`` may
+  be a list/tuple of k member checkpoints (the paper's setting) or a single
+  pytree (this repo's serving default: one checkpoint deployed across all k
+  members) — identical members merge to (numerically) the deployed params
+  themselves, so the parity pool serves the deployed model on convex
+  parity queries.
+
+The scheme is NOT ``model_agnostic``: the provisioned params are a merge
+*product*, not references to the deployed params, so controller escalation
+(which reuses deployed-params pools) cannot target it.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheme import (Capabilities, LinearScheme, register_scheme,
+                               vandermonde)
+
+
+@functools.partial(jax.jit, static_argnames=("fwd",))
+def _diag_fisher_jit(params, x, *, fwd):
+    def nll(p, xi):
+        logits = fwd(p, xi[None])[0]
+        logp = jax.nn.log_softmax(logits)
+        # empirical Fisher at the model's own prediction (no labels needed:
+        # calibration is unlabelled serving-side data)
+        return -logp[jnp.argmax(jax.lax.stop_gradient(logits))]
+    grads = jax.vmap(jax.grad(nll), in_axes=(None, 0))(params, x)
+    return jax.tree.map(lambda g: jnp.mean(jnp.square(g), axis=0), grads)
+
+
+def diag_fisher(fwd, params, x_calib):
+    """Diagonal empirical Fisher of ``params`` under ``fwd`` over the
+    calibration batch ``x_calib`` [n, ...]: per-leaf mean squared
+    per-example gradient of the self-predicted negative log-likelihood."""
+    return _diag_fisher_jit(params, jnp.asarray(x_calib), fwd=fwd)
+
+
+def _row_normalized_vandermonde(k, r):
+    C = np.asarray(vandermonde(k, r), np.float64)   # C[j, i] = (i+1)**j > 0
+    return (C / C.sum(axis=1, keepdims=True)).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class FisherScheme(LinearScheme):
+    """Linear code with row-stochastic coefficients + Fisher-merged parity
+    provisioning; see module docstring.  ``calib_n`` caps the calibration
+    batch drawn from ``ctx.x_train``; ``fisher_floor`` is added to every
+    Fisher diagonal so zero-curvature leaves fall back to the plain
+    coefficient-weighted convex average (and identical members always merge
+    to themselves)."""
+
+    name: str = "fisher"
+    calib_n: int = 64
+    fisher_floor: float = 1e-8
+
+    def __post_init__(self):
+        super().__post_init__()
+        object.__setattr__(
+            self, "_coeffs",
+            jnp.asarray(_row_normalized_vandermonde(self.k, self.r)))
+
+    def capabilities(self) -> Capabilities:
+        # deliberately NOT model_agnostic: the provisioned parity params are
+        # a merge product, not references to the deployed params
+        return Capabilities()
+
+    def provision_parity(self, deployed_params, ctx):
+        """Fisher-weighted checkpoint merge — zero gradient steps.
+
+        One merged pytree per parity row j, member i weighted elementwise by
+        ``c_ji * (F_i + fisher_floor)``.  ``deployed_params``: list/tuple of
+        k member checkpoints, or one pytree deployed across all members."""
+        from repro.checkpoint.io import weighted_merge
+        members = list(deployed_params) \
+            if isinstance(deployed_params, (list, tuple)) \
+            else [deployed_params] * self.k
+        if len(members) != self.k:
+            raise ValueError(
+                f"fisher provisioning needs one checkpoint per member: got "
+                f"{len(members)} for k={self.k}")
+        x = np.asarray(ctx.x_train)[:self.calib_n]
+        distinct = {}          # id -> fisher; one deployed checkpoint => one
+        fishers = []           # fisher pass, not k identical ones
+        for m in members:
+            if id(m) not in distinct:
+                distinct[id(m)] = diag_fisher(ctx.fwd, m, x)
+            fishers.append(distinct[id(m)])
+        C = np.asarray(self.coeffs, np.float64)              # [r, k]
+        parity_params = []
+        for j in range(self.r):
+            weights = [
+                jax.tree.map(
+                    lambda f, c=C[j, i]: c * (f + self.fisher_floor),
+                    fishers[i])
+                for i in range(self.k)]
+            parity_params.append(weighted_merge(members, weights))
+        return parity_params
+
+
+register_scheme(
+    "fisher",
+    lambda k, r=1, backend="jnp", **kw: FisherScheme(
+        k=k, r=r, backend=backend, **kw))

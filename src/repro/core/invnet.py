@@ -1,0 +1,196 @@
+"""Coded-InvNet-style scheme: encode through an invertible coupling network
+(Coded-InvNet for Resilient Prediction Serving Systems, arXiv:2106.06445;
+PAPERS.md).
+
+ParM combines *queries* linearly and asks a trained parity model to act
+linearly over them.  Coded-InvNet flips the burden onto the representation:
+conduct the linear code in the latent space of a small invertible network g,
+
+    p_j  =  g^-1( sum_i  c_ji * g(x_i) )                (encode)
+
+and serve the parities with the DEPLOYED model itself — no parity training.
+Whenever the deployed model factors through g (F = head . g, the
+Coded-InvNet training recipe), the parity output is *exactly* the linear
+combination of the member outputs,
+
+    F(p_j) = head( sum_i c_ji g(x_i) ) = sum_i c_ji F(x_i)   (head linear),
+
+so the inherited ``LinearScheme`` output-code decode is exact inversion —
+bit-exact on an integer-valued invertible substrate (locked by test).  For
+arbitrary deployed models the same pipeline runs as an approximation, just
+like fisher's convex parity queries.
+
+``g`` here is a stack of additive coupling layers over the *flattened
+feature dim* (NICE-style): split features into halves (x1, x2),
+
+    y2 = x2 + t(x1)        y1 = x1 + t'(y2)             (one layer, 2 steps)
+
+with ``t`` a small pointwise scalar MLP shared across positions (params are
+feature-size independent, so one scheme instance serves any query shape).
+Additive coupling has unit Jacobian and an exact inverse by subtraction —
+``g_inverse(g_forward(x)) == x`` to float roundoff, exactly on integers.
+The coupling projection reuses the ``learned_encoder`` Pallas kernel shape
+(``ops.learned_project_op``, [H,B,F]x[H,1] -> [1,B,F]) under
+``backend="pallas"``.
+
+Because ``encode`` is overridden (non-linear), ``fused_parity_outputs``
+automatically takes its exact unfused fallback — the serving layers need no
+edits, which is the point of the registry.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheme import Capabilities, LinearScheme, register_scheme
+
+
+def init_coupling_params(hidden=8, seed=0, n_layers=2):
+    """Deterministic coupling-MLP params: ``n_layers`` layers, each a
+    pointwise scalar MLP  u -> w2^T relu(w1 * u + b1)  (w1 [H], b1 [H],
+    w2 [H, 1]) — feature-size independent by construction."""
+    key = jax.random.PRNGKey(seed)
+    layers = []
+    for _ in range(n_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        layers.append({
+            "w1": (jax.random.normal(k1, (hidden,)) * 0.8).astype(
+                jnp.float32),
+            "b1": (jax.random.normal(k2, (hidden,)) * 0.1).astype(
+                jnp.float32),
+            "w2": (jax.random.normal(k3, (hidden, 1))
+                   * (0.5 / hidden)).astype(jnp.float32),
+        })
+    return layers
+
+
+def _shift(layer, u, use_pallas=False):
+    """Pointwise coupling shift t(u): u [B, F'] -> [B, F'] through the
+    scalar MLP; the [H,B,F']x[H,1] projection runs the ``learned_encoder``
+    Pallas kernel under ``use_pallas``."""
+    h = jax.nn.relu(jnp.einsum("h,bf->hbf", layer["w1"], u)
+                    + layer["b1"][:, None, None])
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.learned_project_op(h, layer["w2"])[0]
+    return jnp.einsum("hr,hbf->rbf", layer["w2"], h)[0]
+
+
+def _pad_to(t, f):
+    """Zero-pad / truncate the shift's feature dim to ``f`` (odd feature
+    counts make the halves unequal; padding keeps coupling invertible)."""
+    if t.shape[1] == f:
+        return t
+    if t.shape[1] > f:
+        return t[:, :f]
+    return jnp.pad(t, ((0, 0), (0, f - t.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _g_forward_flat(layers, x, use_pallas=False):
+    """x [B, F] -> g(x) [B, F]: additive coupling, alternating halves."""
+    f1 = x.shape[1] // 2
+    x1, x2 = x[:, :f1], x[:, f1:]
+    for layer in layers:
+        x2 = x2 + _pad_to(_shift(layer, x1, use_pallas), x2.shape[1])
+        x1 = x1 + _pad_to(_shift(layer, x2, use_pallas), x1.shape[1])
+    return jnp.concatenate([x1, x2], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _g_inverse_flat(layers, y, use_pallas=False):
+    """Exact inverse of ``_g_forward_flat`` by subtraction, reversed."""
+    f1 = y.shape[1] // 2
+    y1, y2 = y[:, :f1], y[:, f1:]
+    for layer in reversed(layers):
+        y1 = y1 - _pad_to(_shift(layer, y2, use_pallas), y1.shape[1])
+        y2 = y2 - _pad_to(_shift(layer, y1, use_pallas), y2.shape[1])
+    return jnp.concatenate([y1, y2], axis=1)
+
+
+@dataclass(frozen=True)
+class InvNetScheme(LinearScheme):
+    """Invertible-coupling encode over the Vandermonde output code; see
+    module docstring.  ``coupling_params=None`` initialises deterministic
+    couplings from ``coupling_seed`` (registry-name resolution in the DES
+    and the differential battery serve a well-defined code)."""
+
+    hidden: int = 8
+    n_layers: int = 2
+    coupling_seed: int = 0
+    coupling_params: Optional[list] = None
+    name: str = "invnet"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.coupling_params is None:
+            object.__setattr__(
+                self, "coupling_params",
+                init_coupling_params(self.hidden, self.coupling_seed,
+                                     self.n_layers))
+
+    def capabilities(self) -> Capabilities:
+        # model_agnostic: the deployed model serves the coupled parity
+        # queries — provisioning returns references, never trains
+        return Capabilities(model_agnostic=True)
+
+    def provision_parity(self, deployed_params, ctx):
+        """No parity training: the deployed model serves g^-1-space parity
+        queries (exactly when it factors through g, approximately
+        otherwise)."""
+        del ctx
+        return [deployed_params] * self.r
+
+    def with_params(self, coupling_params):
+        """A copy of this scheme serving ``coupling_params`` (checkpoint
+        deserialization path, mirroring ``LearnedScheme.with_params``)."""
+        return replace(self, coupling_params=coupling_params)
+
+    def g_forward(self, x):
+        """x [B, ...] -> g(x) [B, ...]: the invertible representation the
+        linear code is conducted in, applied per sample over the flattened
+        trailing feature dims (exposed for substrate construction and the
+        invertibility tests)."""
+        x = jnp.asarray(x).astype(jnp.float32)
+        flat = x.reshape(x.shape[0], -1)
+        out = _g_forward_flat(self.coupling_params, flat,
+                              use_pallas=(self.backend == "pallas"))
+        return out.reshape(x.shape)
+
+    def g_inverse(self, y):
+        y = jnp.asarray(y).astype(jnp.float32)
+        flat = y.reshape(y.shape[0], -1)
+        out = _g_inverse_flat(self.coupling_params, flat,
+                              use_pallas=(self.backend == "pallas"))
+        return out.reshape(y.shape)
+
+    def encode(self, queries):
+        """[k, ...] -> [r, ...]:  g^-1( coeffs @ g(queries) ),  the linear
+        code conducted per-sample in g's latent space.  Queries are
+        interpreted as [k, B, features...] (B = 1 when absent), matching the
+        ``learned`` encoder's convention."""
+        q = jnp.asarray(queries).astype(jnp.float32)
+        assert q.shape[0] == self.k, q.shape
+        flat = q.reshape(self.k, q.shape[1], -1) if q.ndim >= 3 else \
+            q.reshape(self.k, 1, -1)                       # [k, B, F]
+        k, b, f = flat.shape
+        use_pallas = self.backend == "pallas"
+        lat = _g_forward_flat(self.coupling_params, flat.reshape(k * b, f),
+                              use_pallas=use_pallas).reshape(k, b, f)
+        enc = jnp.einsum("rk,kbf->rbf", self.coeffs.astype(lat.dtype), lat)
+        out = _g_inverse_flat(self.coupling_params,
+                              enc.reshape(self.r * b, f),
+                              use_pallas=use_pallas)
+        return out.reshape((self.r,) + q.shape[1:])
+
+    __call__ = encode
+
+
+register_scheme(
+    "invnet",
+    lambda k, r=1, backend="jnp", **kw: InvNetScheme(
+        k=k, r=r, backend=backend, **kw))

@@ -47,7 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheme import LinearScheme, _pallas_encode, register_scheme
+from repro.core.scheme import (Capabilities, LinearScheme, _deprecated_flag,
+                               _pallas_encode, register_scheme)
 
 
 def init_encoder_params(k, r, hidden, seed=0, alpha=0.0):
@@ -106,8 +107,14 @@ class LearnedScheme(LinearScheme):
     enc_params: Optional[dict] = None
     name: str = "learned"
 
-    # train_parity_models switches to the joint encoder+parity objective
-    trainable = True
+    # legacy attribute spelling: readable one release, warns toward
+    # scheme_capabilities(scheme).trainable
+    trainable = _deprecated_flag("trainable", True)
+
+    def capabilities(self) -> Capabilities:
+        # trainable: train_parity_models switches to the joint
+        # encoder+parity objective and returns the trained scheme
+        return Capabilities(trainable=True)
 
     def __post_init__(self):
         super().__post_init__()

@@ -15,14 +15,15 @@ labels — both modes are supported below.
 """
 from __future__ import annotations
 
-import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheme import LinearScheme, ReplicationScheme, get_scheme
+from repro.core.scheme import (LinearScheme, ReplicationScheme, get_scheme,
+                               scheme_capabilities)
 from repro.training.loss import parity_mse
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
@@ -216,61 +217,126 @@ def _train_joint(scheme, parity_fwd, init_fn, x, fx, epochs, seed, batch,
     return params["parity"], scheme.with_params(params["enc"]), losses
 
 
+@dataclass
+class ParityTrainContext:
+    """Everything a scheme's ``provision_parity`` hook may need (DESIGN.md
+    §14): the deployed forward fn, a parity-model initialiser, training /
+    calibration data and the distillation hyperparameters.
+
+    ``scheme`` starts as the scheme being provisioned and is REPLACED by the
+    joint-training path when the encoder itself is trained (``learned``) —
+    ``train_parity_models`` returns ``ctx.scheme``, so a hook that retrains
+    or re-parameterises the scheme publishes the new instance here.
+
+    ``deployed_outputs(deployed_params)`` lazily computes (and caches) the
+    distillation targets F(x_train) — or the scaled one-hot labels when
+    ``use_true_labels`` — so training-free hooks (fisher, invnet,
+    approxifer) never pay for the full forward pass."""
+
+    fwd: Callable                        # fwd(params, x) -> outputs
+    init_fn: Optional[Callable]          # init_fn(key) -> parity params
+    x_train: Any                         # [n, ...] queries
+    epochs: int = 5
+    seed: int = 0
+    batch: int = 64
+    use_true_labels: bool = False
+    labels: Any = None
+    n_classes: Optional[int] = None
+    parity_fwd: Optional[Callable] = None   # defaults to fwd
+    scheme: Any = None                   # published (possibly retrained)
+    _fx: Any = field(default=None, repr=False)
+
+    @property
+    def pfwd(self):
+        return self.parity_fwd or self.fwd
+
+    def deployed_outputs(self, deployed_params):
+        if self._fx is None:
+            if self.use_true_labels:
+                # scaled one-hot labels (paper §4.1's label-sum variant)
+                self._fx = np.eye(self.n_classes,
+                                  dtype=np.float32)[self.labels] * 10.0
+            else:
+                self._fx = np.asarray(jax.jit(self.fwd)(
+                    deployed_params, jnp.asarray(self.x_train)))
+        return self._fx
+
+
+def default_provision(scheme, deployed_params, ctx: ParityTrainContext):
+    """The stock provisioning path schemes delegate to: per-row MSE
+    distillation (paper §3.3), or the joint encoder+parity objective for
+    ``trainable`` schemes (the trained scheme is published on
+    ``ctx.scheme``).  Legacy attribute-style ``model_agnostic`` schemes
+    (no ``provision_parity`` of their own) still short-circuit to r
+    references of the deployed params here."""
+    caps = scheme_capabilities(scheme)
+    if caps.model_agnostic:
+        return [deployed_params] * scheme.r
+    fx = ctx.deployed_outputs(deployed_params)
+    if caps.trainable:
+        parity_params, trained, _ = _train_joint(
+            scheme, ctx.pfwd, ctx.init_fn, ctx.x_train, fx,
+            epochs=ctx.epochs, seed=ctx.seed, batch=ctx.batch)
+        ctx.scheme = trained
+        return parity_params
+    rng = np.random.default_rng(ctx.seed)
+    parity_params = []
+    for j in range(scheme.r):
+        pq, tg = make_parity_dataset(np.asarray(ctx.x_train), fx, scheme.k,
+                                     scheme, j, rng)
+        key = jax.random.PRNGKey(ctx.seed + 17 * j)
+        pp = ctx.init_fn(key)
+        trainer = ParityTrainer(fwd=ctx.pfwd)
+        pp, _ = trainer.train(pp, pq, tg, batch=ctx.batch, epochs=ctx.epochs,
+                              seed=ctx.seed + j)
+        parity_params.append(pp)
+    return parity_params
+
+
 def train_parity_models(deployed_params, fwd, init_fn, x_train, k, r=None,
                         scheme="sum", epochs=5, seed=0, batch=64,
                         use_true_labels=False, labels=None, n_classes=None,
                         encoder_kind=None, parity_fwd=None):
-    """End-to-end §3.3 pipeline: trains one parity model per parity row of
-    ``scheme`` (a ``CodingScheme`` instance or registered name; ``r`` defaults
-    to 1 for names and to the scheme's own r for instances — an explicit
-    mismatch raises).  Grouping follows ``scheme.k`` — a ``fixes_k`` scheme
-    (approx_backup: k=1) owns its group size, which turns this pipeline into
-    plain backup-model distillation for it.
+    """End-to-end §3.3 pipeline, dispatched through the scheme-owned
+    ``provision_parity(deployed_params, ctx)`` hook (DESIGN.md §14): trains
+    (or merges, or aliases) one parity params list per parity row of
+    ``scheme`` (a ``CodingScheme`` instance or registered name; ``r``
+    defaults to 1 for names and to the scheme's own r for instances — an
+    explicit mismatch raises).  Grouping follows ``scheme.k`` — a
+    ``fixes_k`` scheme (approx_backup: k=1) owns its group size, which turns
+    the default distillation into plain backup-model training for it.
 
-    A scheme with ``trainable = True`` (the ``learned`` scheme) switches to
-    the joint encoder+parity objective: encoder params and all r parity
-    models are optimised together and the *returned scheme* carries the
-    trained, frozen encoder.
+    What provisioning means is the scheme's call:
+
+    * default (``sum``/``concat``/``replication``/``approx_backup``) — the
+      per-row MSE distillation loop (``default_provision``);
+    * ``learned`` — the joint encoder+parity objective; the *returned
+      scheme* carries the trained, frozen encoder;
+    * ``approxifer`` / ``invnet`` — no training at all: the deployed model
+      itself serves the encoded queries (r references to
+      ``deployed_params``);
+    * ``fisher`` — Fisher-weighted checkpoint merging; zero gradient steps.
 
     ``parity_fwd`` lets the parity model be a different architecture from
     the deployed model (the approx_backup scheme's cheap backup); defaults
     to ``fwd``.
 
     Returns ``(list of scheme.r parity params, scheme)`` — the scheme object
-    carries ``encode`` / ``decode`` / ``decode_one`` / ``coeffs`` for serving.
-
-    ``encoder_kind=`` is a deprecated alias for ``scheme=``."""
+    carries ``encode`` / ``decode`` / ``decode_one`` / ``coeffs`` for
+    serving."""
     if encoder_kind is not None:
-        warnings.warn(
-            "train_parity_models(encoder_kind=...) is deprecated; pass "
-            "scheme= (a registered name or CodingScheme instance)",
-            DeprecationWarning, stacklevel=2)
-        scheme = encoder_kind
+        raise TypeError(
+            "train_parity_models(encoder_kind=...) was removed; pass "
+            "scheme= (a registered name or CodingScheme instance), e.g. "
+            "train_parity_models(..., scheme='sum')")
     scheme = get_scheme(scheme, k=k, r=r)
-    pfwd = parity_fwd or fwd
-    if getattr(scheme, "model_agnostic", False):
-        # approxifer-style interpolation codes need NO parity training: the
-        # deployed model itself serves the encoded queries (the decoder
-        # re-interpolates its outputs), so the "parity models" are r copies
-        # of the deployed params and the pipeline is a no-op
-        return [deployed_params] * scheme.r, scheme
-    fx = np.asarray(jax.jit(fwd)(deployed_params, jnp.asarray(x_train)))
-    if use_true_labels:
-        fx = np.eye(n_classes, dtype=np.float32)[labels] * 10.0  # scaled one-hot
-    if getattr(scheme, "trainable", False):
-        parity_params, scheme, _ = _train_joint(
-            scheme, pfwd, init_fn, x_train, fx, epochs=epochs, seed=seed,
-            batch=batch)
-        return parity_params, scheme
-    rng = np.random.default_rng(seed)
-    parity_params = []
-    for j in range(scheme.r):
-        pq, tg = make_parity_dataset(np.asarray(x_train), fx, scheme.k,
-                                     scheme, j, rng)
-        key = jax.random.PRNGKey(seed + 17 * j)
-        pp = init_fn(key)
-        trainer = ParityTrainer(fwd=pfwd)
-        pp, _ = trainer.train(pp, pq, tg, batch=batch, epochs=epochs,
-                              seed=seed + j)
-        parity_params.append(pp)
-    return parity_params, scheme
+    ctx = ParityTrainContext(
+        fwd=fwd, init_fn=init_fn, x_train=x_train, epochs=epochs, seed=seed,
+        batch=batch, use_true_labels=use_true_labels, labels=labels,
+        n_classes=n_classes, parity_fwd=parity_fwd, scheme=scheme)
+    hook = getattr(type(scheme), "provision_parity", None)
+    if hook is None:
+        parity_params = default_provision(scheme, deployed_params, ctx)
+    else:
+        parity_params = hook(scheme, deployed_params, ctx)
+    return parity_params, ctx.scheme

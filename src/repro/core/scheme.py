@@ -43,6 +43,29 @@ Built-in entries:
                      decoder adapts its arity to however many responses
                      arrived, voting out erroneous (Byzantine) responses
                      when it holds surplus ones (``detects_errors``).
+* ``fisher``       — ``repro.core.fisher.FisherScheme``: training-free
+                     parity models built by Fisher-information-weighted
+                     merging of the k deployed checkpoints (arXiv:2409.01420)
+                     — ``provision_parity`` merges leaf-wise via
+                     ``checkpoint/io.py``; encode/decode stay the linear
+                     output code, zero gradient steps.
+* ``invnet``       — ``repro.core.invnet.InvNetScheme``: Coded-InvNet-style
+                     encoding (arXiv:2106.06445) through a small invertible
+                     additive-coupling network g: parities are
+                     g^-1(C @ g(x)), decode is the exact linear output code
+                     on the invertible substrate; no parity training
+                     (``model_agnostic`` — the deployed model serves the
+                     encoded queries).
+
+Capability flags (``model_agnostic`` / ``trainable`` / ``fixes_k`` /
+``dynamic_arity`` / ``detects_errors`` / ``approximate``) are declared by a
+scheme's ``capabilities() -> Capabilities`` method and read by every train /
+serving / eval call site through ``scheme_capabilities(scheme)`` — the old
+per-attribute duck-typing is deprecated (readable one release).  Parity-model
+provisioning is likewise scheme-owned: ``provision_parity(deployed_params,
+ctx)`` returns the r parity params lists (DESIGN.md §14), with
+``repro.core.parity.default_provision`` as the distillation/joint-training
+default.
 
 ``backend="jnp" | "pallas"`` selects the implementation of the hot paths:
 ``pallas`` routes encode / r=1-decode through the Pallas TPU kernels in
@@ -60,7 +83,8 @@ feature-test with ``hasattr``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, fields
 from typing import Callable, Dict, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
@@ -89,6 +113,87 @@ class CodingScheme(Protocol):
                parity_avail=None): ...
 
     def decode_one(self, parity_out, outputs, missing_idx): ...
+
+
+# ----------------------------------------------------------- capabilities ---
+@dataclass(frozen=True)
+class Capabilities:
+    """The declared capability surface of a coding scheme.
+
+    One frozen record replacing the scattered per-attribute duck-typing the
+    serving/training/eval layers used to do (``getattr(scheme, "...")``).
+    A scheme declares its flags by defining ``capabilities() ->
+    Capabilities``; call sites read them ONLY through
+    ``scheme_capabilities(scheme)``, which also keeps legacy attribute-style
+    schemes working one release (with a ``DeprecationWarning``).
+
+    * ``model_agnostic`` — no parity model is trained: the deployed model
+      itself serves the encoded queries (``provision_parity`` returns r
+      references to the deployed params), which is also what makes the
+      scheme a valid controller-escalation target;
+    * ``trainable``      — the encoder has trainable parameters, optimised
+      jointly with the parity models (the ``learned`` scheme);
+    * ``fixes_k``        — the scheme owns its group size (approx_backup:
+      k = 1) independent of the caller's redundancy-budget k;
+    * ``dynamic_arity``  — recoverability is a response COUNT, not a fixed
+      mask rule (approxifer);
+    * ``detects_errors`` — the decoder can vote out erroneous (Byzantine)
+      responses from surplus ones;
+    * ``approximate``    — reconstructions are degraded-quality; the DES
+      runs the parity pool at ``cfg.approx_speedup``.
+    """
+
+    model_agnostic: bool = False
+    trainable: bool = False
+    fixes_k: bool = False
+    dynamic_arity: bool = False
+    detects_errors: bool = False
+    approximate: bool = False
+
+
+class _deprecated_flag:
+    """Class-attribute descriptor keeping the pre-``capabilities()`` boolean
+    flags readable one release: reading warns toward
+    ``scheme_capabilities()`` and returns the declared value."""
+
+    def __init__(self, name, value):
+        self.name, self.value = name, value
+
+    def __get__(self, obj, objtype=None):
+        warnings.warn(
+            f"reading scheme.{self.name} is deprecated; use "
+            f"repro.core.scheme.scheme_capabilities(scheme).{self.name}",
+            DeprecationWarning, stacklevel=2)
+        return self.value
+
+
+def scheme_capabilities(scheme) -> Capabilities:
+    """THE capability-dispatch entry point for train/serving/eval layers.
+
+    Schemes that define ``capabilities()`` are read through it; schemes
+    that still declare the old boolean class attributes get them collected
+    into a ``Capabilities`` record with a ``DeprecationWarning`` (one
+    release of compatibility); schemes declaring neither get the default
+    (all-False) record."""
+    fn = getattr(type(scheme), "capabilities", None)
+    if fn is not None:
+        return fn(scheme)
+    found = {}
+    for f in fields(Capabilities):
+        # read via the field name (never a literal attribute spelling) so
+        # legacy schemes keep working without this module itself becoming a
+        # duck-typing call site
+        v = getattr(scheme, f.name, None)
+        if v is not None:
+            found[f.name] = bool(v)
+    if found:
+        warnings.warn(
+            f"scheme {getattr(scheme, 'name', scheme)!r} declares "
+            f"capability attributes ({sorted(found)}) but no "
+            f"capabilities() method; attribute-style flags are deprecated "
+            f"— define capabilities() -> Capabilities",
+            DeprecationWarning, stacklevel=2)
+    return Capabilities(**found)
 
 
 def _check_backend(backend):
@@ -328,6 +433,16 @@ class LinearScheme:
     # default — one subtraction decode for a single missing row, the masked
     # least-squares solve scaling with the missing count beyond that
 
+    def capabilities(self) -> Capabilities:
+        """Plain linear codes declare no special capabilities."""
+        return Capabilities()
+
+    def provision_parity(self, deployed_params, ctx):
+        """Default provisioning: delegate to the per-row distillation / joint
+        training owned by ``repro.core.parity`` (DESIGN.md §14)."""
+        from repro.core.parity import default_provision  # lazy: parity
+        return default_provision(self, deployed_params, ctx)  # imports us
+
 
 @dataclass(frozen=True)
 class ConcatScheme(LinearScheme):
@@ -416,6 +531,16 @@ class ReplicationScheme:
         """"Encoding" mirrors the queries — no frontend math runs."""
         return 0.0
 
+    def capabilities(self) -> Capabilities:
+        return Capabilities()
+
+    def provision_parity(self, deployed_params, ctx):
+        """Replicas are distilled copies: delegate to the default per-row
+        distillation (identity encode means each row mimics the deployed
+        model directly)."""
+        from repro.core.parity import default_provision  # lazy (circular)
+        return default_provision(self, deployed_params, ctx)
+
 
 @dataclass(frozen=True)
 class ApproxBackupScheme(ReplicationScheme):
@@ -437,8 +562,15 @@ class ApproxBackupScheme(ReplicationScheme):
 
     k: int = 1
     name: str = "approx_backup"
-    fixes_k = True              # group size is the scheme's own, not budget k
-    approximate = True          # DES: parity pool runs at cfg.approx_speedup
+    # legacy attribute spellings: readable one release, warn toward
+    # scheme_capabilities() (not dataclass fields — no annotations)
+    fixes_k = _deprecated_flag("fixes_k", True)
+    approximate = _deprecated_flag("approximate", True)
+
+    def capabilities(self) -> Capabilities:
+        # group size is the scheme's own (k = 1), not the budget k; the DES
+        # runs the backup pool at cfg.approx_speedup
+        return Capabilities(fixes_k=True, approximate=True)
 
     def __post_init__(self):
         if self.k != 1:
@@ -505,7 +637,7 @@ def get_scheme(scheme, k=None, r=None, *, backend=None, **kw) -> CodingScheme:
             raise TypeError(
                 f"not a CodingScheme or registered name: {scheme!r}")
         if k is not None and scheme.k != k and \
-                not getattr(scheme, "fixes_k", False):
+                not scheme_capabilities(scheme).fixes_k:
             raise ValueError(
                 f"scheme {scheme.name!r} has k={scheme.k}, but k={k} was "
                 f"requested")
@@ -554,4 +686,9 @@ from repro.core import learned as _learned  # noqa: E402  (registration)
 # decoder) likewise registers itself on import
 from repro.core import approxifer as _approxifer  # noqa: E402  (registration)
 
-del _learned, _approxifer
+# the training-free schemes: fisher (checkpoint merging) and invnet
+# (invertible-coupling encode) register themselves on import
+from repro.core import fisher as _fisher  # noqa: E402  (registration)
+from repro.core import invnet as _invnet  # noqa: E402  (registration)
+
+del _learned, _approxifer, _fisher, _invnet

@@ -22,7 +22,16 @@ layers use, so this is also an end-to-end exercise of the plugin API:
 * ``approxifer``        — the rational-interpolation code: NO parity
                           training at all (``model_agnostic`` — the
                           deployed model serves the encoded queries), A_d
-                          is pure interpolation quality.
+                          is pure interpolation quality;
+* ``fisher``            — training-free Fisher-merged parity models
+                          (``provision_parity`` merges the deployed
+                          checkpoints leaf-wise; with one deployed
+                          checkpoint the merged parity model IS the
+                          deployed model on convex parity queries);
+* ``invnet``            — the invertible-coupling code: the deployed model
+                          serves g^-1-space parity queries, decode is the
+                          linear output code (exact when the model factors
+                          through g).
 
 ``accuracy_under_errors`` extends the methodology to the Byzantine fault
 class: all responses arrive, but a fraction of the member responses is
@@ -47,13 +56,14 @@ import numpy as np
 from repro.configs.resnet18_cifar import IMAGE_SHAPE
 from repro.core.metrics import degraded_accuracy, topk_accuracy
 from repro.core.parity import fused_parity_outputs, train_parity_models
+from repro.core.scheme import scheme_capabilities
 from repro.data.pipeline import batched, cluster_images
 from repro.models.cnn import build
 from repro.training.loss import softmax_xent
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
 DEFAULT_SCHEMES = ("sum", "concat", "learned", "approx_backup",
-                   "approxifer")
+                   "approxifer", "fisher", "invnet")
 
 
 def _train_deployed(x, y, model, image_shape, n_classes, epochs, seed):
@@ -146,7 +156,7 @@ def _served_under_errors(scheme, member, parity_outs, corrupt):
     g_n, k, v = member.shape
     served = member.copy()
     served[corrupt] = CORRUPTION_SCALE
-    if not getattr(scheme, "detects_errors", False):
+    if not scheme_capabilities(scheme).detects_errors:
         return served
     r = scheme.r
     ones_m = np.ones(k, bool)
@@ -164,7 +174,8 @@ def _served_under_errors(scheme, member, parity_outs, corrupt):
     return served
 
 
-def accuracy_under_errors(schemes=("sum", "learned", "approxifer"), *,
+def accuracy_under_errors(schemes=("sum", "learned", "approxifer", "fisher",
+                                   "invnet"), *,
                           error_rates=(0.0, 0.1, 0.25), model="resnet",
                           image_shape=IMAGE_SHAPE, n_classes=10, k=2, r=2,
                           n_train=1500, n_test=600, noise=2.0,

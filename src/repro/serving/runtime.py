@@ -67,7 +67,8 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.scheme import get_scheme, recoverable_rows
+from repro.core.scheme import (get_scheme, recoverable_rows,
+                               scheme_capabilities)
 from repro.serving.api import BatchingPolicy, DeploymentSpec
 from repro.serving.controller import Adjustment, get_controller
 from repro.serving.report import ServingReport, build_window
@@ -259,9 +260,9 @@ class ParMFrontend:
     sizes the pools. ``backend`` selects the jnp or Pallas-kernel hot path
     when ``scheme`` is given by name.
 
-    The old ``mode=`` kwarg is a deprecated alias for ``strategy=``; the old
-    ``backup_params=`` (the removed dedicated backup pool) is a deprecated
-    alias for ``parity_params=``.
+    The PR-1-era ``mode=`` and ``backup_params=`` kwargs are REMOVED: they
+    raise ``TypeError`` with a migration message (``strategy=`` /
+    ``parity_params=``).
     """
 
     def __init__(self, fwd=_UNSET, deployed_params=_UNSET,
@@ -298,35 +299,31 @@ class ParMFrontend:
             "fwd": fwd, "deployed_params": deployed_params,
             "parity_params": parity_params, "k": k, "r": r, "m": m,
             "strategy": strategy, "scheme": scheme, "backend": backend,
-            "mode": mode, "delay_fn": delay_fn, "encode_fn": encode_fn,
+            "delay_fn": delay_fn, "encode_fn": encode_fn,
             "decode_fn": decode_fn,
             "default_prediction": default_prediction, "slo_ms": slo_ms,
-            "backup_params": backup_params, "parity_fwd": parity_fwd,
+            "parity_fwd": parity_fwd,
             "scenario": scenario, "scenario_seed": scenario_seed,
             "scenario_time_scale": scenario_time_scale,
             "scenario_horizon_ms": scenario_horizon_ms,
             "batching": batching}.items() if v is not _UNSET}
+        # PR-1-era spellings: removed after one deprecation release
+        if mode is not _UNSET:
+            raise TypeError(
+                "ParMFrontend(mode=...) was removed; pass strategy= (a "
+                "registered ResilienceStrategy name or instance)")
+        if backup_params is not _UNSET:
+            raise TypeError(
+                "ParMFrontend(backup_params=...) was removed; approximate "
+                "backups are the coded 'approx_backup' scheme — pass "
+                "parity_params= (and parity_fwd= for a cheaper "
+                "architecture)")
         if spec is None:
             # legacy kwarg surface: remap the old spellings, then build the
             # spec from ONLY the kwargs actually passed — every default
             # comes from DeploymentSpec itself, so the two construction
             # surfaces cannot drift
             kw = dict(passed)
-            if "mode" in kw:
-                warnings.warn(
-                    "ParMFrontend(mode=...) is deprecated; use strategy=",
-                    DeprecationWarning, stacklevel=2)
-                kw["strategy"] = kw.pop("mode")
-            if "backup_params" in kw:
-                warnings.warn(
-                    "ParMFrontend(backup_params=...) is deprecated; "
-                    "approximate backups are the coded 'approx_backup' "
-                    "scheme now — pass parity_params= (and parity_fwd= for "
-                    "a cheaper architecture)",
-                    DeprecationWarning, stacklevel=2)
-                bp = kw.pop("backup_params")
-                if kw.get("parity_params") is None:
-                    kw["parity_params"] = bp
             if "deployed_params" in kw:
                 kw["params"] = kw.pop("deployed_params")
             if kw.get("batching") is None:         # legacy "no policy"
@@ -464,7 +461,7 @@ class ParMFrontend:
         # non-empty candidate set the same way)
         self._corrupting = corrupt_fn is not None
         self._detecting = self.strategy.coded and \
-            getattr(self.scheme, "detects_errors", False) and \
+            scheme_capabilities(self.scheme).detects_errors and \
             corrupt_fn is not None
         self.main_q = queue.Queue()
         self.workers = []
@@ -614,7 +611,7 @@ class ParMFrontend:
             else:
                 new = get_scheme(name, k=self.k, r=want_r,
                                  backend=self.spec.backend)
-                if not getattr(new, "model_agnostic", False):
+                if not scheme_capabilities(new).model_agnostic:
                     # escalation pools run the deployed parameters; a
                     # trained-parity scheme's decoder would consume the
                     # wrong model's outputs and serve numerically wrong
@@ -631,7 +628,7 @@ class ParMFrontend:
                         f"escalation pools but only {self._agn_r} were "
                         f"provisioned — raise Controller.escalation_r")
             self.scheme, self.r, self.group_k = new, new.r, new.k
-            self._detecting = getattr(new, "detects_errors", False) and \
+            self._detecting = scheme_capabilities(new).detects_errors and \
                 self._corrupting
         if adj.batch_max_size is not None:
             self.batching = replace(self.batching,

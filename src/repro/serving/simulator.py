@@ -106,7 +106,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core.scheme import (ReplicationScheme, decode_cost, encode_cost,
-                               get_scheme, recoverable_rows)
+                               get_scheme, recoverable_rows,
+                               scheme_capabilities)
 from repro.serving.controller import Adjustment, get_controller
 from repro.serving.report import ServingReport, build_window
 from repro.serving.scenarios import TenantClass, get_scenario
@@ -795,13 +796,16 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
     # the CURRENT deployment knobs — mutable, because a controller may
     # retune them mid-run; new coding groups capture them at assembly
     cur = {"schm": None, "r": cfg.r, "gk": k, "enc_ms": cfg.encode_ms,
-           "batch_max": max(1, cfg.batch_max_size)}
+           "det": False, "batch_max": max(1, cfg.batch_max_size)}
     if strat.coded:
+        caps = scheme_capabilities(resolved)
         cur["schm"] = resolved
         cur["r"] = resolved.r               # a scheme may fix its own r
         cur["gk"] = resolved.k              # ... and its own group size
         cur["enc_ms"] = cfg.encode_ms * encode_cost(resolved)
-        if getattr(resolved, "approximate", False):
+        # capability read hoisted out of the per-group hot loop
+        cur["det"] = caps.detects_errors
+        if caps.approximate:
             # approx_backup scheme: the parity pool runs cheap backup models
             parity_service_ms = cfg.service_ms / cfg.approx_speedup
     # the deployment's own resolved scheme OBJECT and r: controller
@@ -1031,7 +1035,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                 new = base_schm
             else:
                 new = get_scheme(name, k=k, r=want_r, backend=backend)
-                if not getattr(new, "model_agnostic", False):
+                if not scheme_capabilities(new).model_agnostic:
                     raise ValueError(
                         f"controller adjustment to scheme {name!r} "
                         f"(r={new.r}) is not the deployment base and not "
@@ -1045,6 +1049,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                         f"provisioned — raise Controller.escalation_r")
             cur["schm"], cur["r"], cur["gk"] = new, new.r, new.k
             cur["enc_ms"] = cfg.encode_ms * encode_cost(new)
+            cur["det"] = scheme_capabilities(new).detects_errors
         if adj.batch_max_size is not None:
             cur["batch_max"] = max(1, adj.batch_max_size)
             if live:
@@ -1249,8 +1254,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                     groups[g] = {
                         "members": np.array(pending, dtype=int),
                         "schm": cur["schm"], "r": cur["r"],
-                        "det": getattr(cur["schm"], "detects_errors",
-                                       False),
+                        "det": cur["det"],
                         "parity_t": np.full(cur["r"], np.inf)}
                     pending.clear()
                     # base-scheme groups go to the trained parity pools;
@@ -1304,7 +1308,7 @@ def simulate(cfg: SimConfig, strategy="parm", scheme=None, scenario=None,
                         g = int(gid_of[idx])
                         ginfo = groups.get(g)
                         det = ginfo["det"] if ginfo is not None else \
-                            getattr(cur["schm"], "detects_errors", False)
+                            cur["det"]
                     else:
                         det = False
                     if corrupt and det:

@@ -194,15 +194,10 @@ def test_frontend_rejects_spec_plus_legacy_kwargs():
         ParMFrontend(_linear_fwd, W, spec=spec)
 
 
-def test_frontend_mode_kwarg_still_warns_through_spec_path():
+def test_frontend_mode_kwarg_raises_through_spec_path():
     W = jnp.ones((4, 3), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="strategy="):
-        fe = ParMFrontend(_linear_fwd, W, k=2, m=1, mode="none")
-    try:
-        assert fe.strategy.name == "none"
-        assert fe.spec.strategy == "none"
-    finally:
-        fe.shutdown()
+    with pytest.raises(TypeError, match="strategy="):
+        ParMFrontend(_linear_fwd, W, k=2, m=1, mode="none")
 
 
 def test_threads_and_sim_sessions_share_one_spec_object():

@@ -209,6 +209,56 @@ def test_gate_honors_baseline_gate_map_end_to_end(tmp_path):
     assert broken.returncode == 2
 
 
+def test_accuracy_ranking_table_renders_sorted():
+    """The acc_unavail_* metrics the accuracy smoke lane merges into
+    BENCH_ci.json render as their own A_d ranking section (they are
+    informational in the gate, so compare() never rows them)."""
+    cur = {"acc_unavail_Aa": 0.99, "acc_unavail_sum_Ad": 0.24,
+           "acc_unavail_fisher_Ad": 0.94, "acc_unavail_invnet_Ad": 0.94,
+           "smoke_parm_p999_ms": 10.0}
+    md = regression_check.accuracy_ranking_table(cur)
+    assert "A_d scheme ranking" in md and "A_a = 0.990" in md
+    assert md.index("`fisher`") < md.index("`sum`")     # ranked descending
+    assert "+0.000" in md and "-0.700" in md
+    # ties break alphabetically so the table is deterministic
+    assert md.index("`fisher`") < md.index("`invnet`")
+    # no accuracy metrics -> no section at all
+    assert regression_check.accuracy_ranking_table(
+        {"smoke_parm_p999_ms": 10.0}) == ""
+
+
+def test_gate_appends_accuracy_ranking_to_step_summary(tmp_path):
+    md = tmp_path / "summary.md"
+    res = _run_gate(tmp_path,
+                    {"a_p999_ms": 10.0, "acc_unavail_Aa": 0.99,
+                     "acc_unavail_fisher_Ad": 0.94,
+                     "acc_unavail_sum_Ad": 0.24},
+                    {"a_p999_ms": 10.0}, "--markdown", str(md))
+    assert res.returncode == 0, res.stderr
+    text = md.read_text()
+    assert "Bench gate" in text
+    assert "A_d scheme ranking" in text and "`fisher`" in text
+
+
+def test_checked_in_baseline_covers_accuracy_lane():
+    """Every registered scheme must have a baseline A_d entry (the
+    accuracy lane sweeps the registry), gated informational — accuracy at
+    smoke scale moves with training noise.  The recorded baseline itself
+    must show the training-free fisher scheme at or above the distilled
+    sum baseline (the PR-10 acceptance bar)."""
+    with open(REPO / "benchmarks" / "BENCH_baseline.json") as f:
+        doc = json.load(f)
+    metrics, gate = doc["metrics"], doc["gate"]
+    from repro.eval.unavailability import DEFAULT_SCHEMES
+    assert "acc_unavail_Aa" in metrics
+    for scheme in DEFAULT_SCHEMES:
+        name = f"acc_unavail_{scheme}_Ad"
+        assert name in metrics, scheme
+        assert gate[name] == {"informational": True}, name
+    assert gate["acc_unavail_Aa"] == {"informational": True}
+    assert metrics["acc_unavail_fisher_Ad"] >= metrics["acc_unavail_sum_Ad"]
+
+
 def test_checked_in_baseline_gates_kernel_lane():
     """The kernel bench lane (DESIGN.md §12): the checked-in baseline must
     carry the kernel_* smoke metrics AND the gate map that pins the fused

@@ -127,12 +127,13 @@ def test_every_registered_scheme_roundtrips_under_all_masks():
 
     The parity outputs are the ideal output-code combinations
     ``coeffs @ outs`` — what a perfect parity model returns.  For schemes
-    whose input code IS the output code (sum, replication, approx_backup,
-    and the learned scheme's zero-initialised residual) that equals
-    ``encode(outs)``, which is asserted too; concat's input code is the
-    image grid (§4.2.3), so only the output-code invariant applies.
-    The learned scheme is checked at loose tolerance (its decode is the
-    shared masked least-squares solve)."""
+    whose input code IS the output code (sum, fisher, replication,
+    approx_backup, and the learned scheme's zero-initialised residual) that
+    equals ``encode(outs)``, which is asserted too; concat's input code is
+    the image grid (§4.2.3) and invnet's is conducted in the coupling
+    network's latent space, so only the output-code invariant applies to
+    them.  The learned scheme is checked at loose tolerance (its decode is
+    the shared masked least-squares solve)."""
     from itertools import combinations
 
     from repro.core.scheme import available_schemes
@@ -149,7 +150,7 @@ def test_every_registered_scheme_roundtrips_under_all_masks():
             parity = jnp.einsum("rk,k...->r...",
                                 jnp.asarray(scheme.coeffs, jnp.float32),
                                 outs)
-            if name != "concat":
+            if name not in ("concat", "invnet"):
                 np.testing.assert_allclose(
                     np.asarray(scheme.encode(outs)), np.asarray(parity),
                     atol=1e-4, err_msg=name)
@@ -182,7 +183,8 @@ def test_dynamic_arity_schemes_roundtrip_under_combined_loss_masks():
     the (complete) member outputs."""
     from itertools import combinations
 
-    from repro.core.scheme import available_schemes, recoverable_rows
+    from repro.core.scheme import (available_schemes, recoverable_rows,
+                                   scheme_capabilities)
 
     swept = 0
     for name in available_schemes():
@@ -190,7 +192,7 @@ def test_dynamic_arity_schemes_roundtrip_under_combined_loss_masks():
             scheme = get_scheme(name, k=3, r=2)
         except ValueError:
             continue
-        if not getattr(scheme, "dynamic_arity", False):
+        if not scheme_capabilities(scheme).dynamic_arity:
             continue
         swept += 1
         k, r = scheme.k, scheme.r
@@ -220,17 +222,8 @@ def test_dynamic_arity_schemes_roundtrip_under_combined_loss_masks():
     assert swept >= 1            # approxifer is registered
 
 
-def test_make_code_shim_warns_and_matches_scheme():
-    """Legacy make_code() still works but deprecates toward get_scheme()."""
-    with pytest.warns(DeprecationWarning):
-        enc, dec = make_code(3, 1, "sum")
-    scheme = get_scheme("sum", k=3, r=1)
-    q = jnp.asarray(np.random.default_rng(0).normal(
-        size=(3, 2, 6)).astype(np.float32))
-    np.testing.assert_allclose(np.asarray(enc(q)),
-                               np.asarray(scheme.encode(q)), atol=1e-6)
-    outs = jnp.asarray(np.random.default_rng(1).normal(
-        size=(3, 2, 6)).astype(np.float32))
-    np.testing.assert_allclose(
-        np.asarray(dec.decode_one(q[0], outs, 1)),
-        np.asarray(scheme.decode_one(q[0], outs, 1)), atol=1e-6)
+def test_make_code_shim_raises_with_migration_message():
+    """The PR-1-era make_code() shim is removed: TypeError pointing at
+    get_scheme()."""
+    with pytest.raises(TypeError, match="get_scheme"):
+        make_code(3, 1, "sum")

@@ -73,12 +73,23 @@ def _linear_fwd(p, x):
 def _make_spec(scheme, k, r, scenario, *, m=None, strategy="parm"):
     """ONE DeploymentSpec consumed verbatim by BOTH engines.  The deployed
     model is linear, so W itself is an exact parity model for ANY linear
-    combination — every Vandermonde row is served exactly."""
+    combination — every Vandermonde row is served exactly.  For invnet the
+    deployed model factors through the scheme's own coupling network
+    (fwd = g(x) @ W), which makes the deployed model an exact parity model
+    on the g^-1-space parity queries."""
     rng = np.random.default_rng(0)
     W = jnp.asarray(rng.normal(size=(8, 5)).astype(np.float32))
+    fwd = _linear_fwd
+    if scheme == "invnet":
+        from repro.core.scheme import get_scheme
+        inst = get_scheme("invnet", k=k, r=r)
+
+        def fwd(p, x, _g=inst.g_forward):
+            return _g(x) @ p
+        scheme = inst
     parity_params = None if scheme == "replication" else \
         [W] * (r if r else 1)
-    spec = DeploymentSpec(fwd=_linear_fwd, params=W,
+    spec = DeploymentSpec(fwd=fwd, params=W,
                           parity_params=parity_params, strategy=strategy,
                           scheme=scheme, k=k, r=r,
                           m=k if m is None else m, scenario=scenario)
@@ -111,7 +122,7 @@ def _run_runtime(spec, W, n, gap_s=0.0):
         assert sess.wait_all(timeout=30)
         for f, x in zip(futs, xs):
             np.testing.assert_allclose(f.result(timeout=1.0),
-                                       np.asarray(_linear_fwd(W, x)),
+                                       np.asarray(spec.fwd(W, x)),
                                        atol=1e-2)
     finally:
         sess.shutdown()
@@ -170,6 +181,20 @@ CODED_CASES = [
     # one straggler + one lost extra response: k - 1 members + the
     # surviving extra response still reach arity k
     ("approxifer", 2, 2, (0,), (1,), 1, True),
+    # fisher: the linear output code with row-stochastic coefficients —
+    # provisioning merges checkpoints instead of training, but the serving
+    # contract is plain linear, so the battery's exact-linear model serves
+    # every convex parity row exactly
+    ("fisher", 2, 1, (0,), (), 1, True),
+    ("fisher", 2, 1, (0, 1), (), 1, False),
+    ("fisher", 2, 2, (0, 1), (), 2, True),
+    # invnet: the code is conducted in the coupling network's latent space;
+    # the battery's deployed model factors through g (fwd = g(x) @ W), so
+    # the deployed model IS an exact parity model (model_agnostic) and the
+    # linear output-code decode is exact
+    ("invnet", 2, 1, (0,), (), 1, True),
+    ("invnet", 2, 1, (0, 1), (), 1, False),
+    ("invnet", 2, 2, (0, 1), (), 2, True),
     # approx_backup-as-a-scheme: k=1 groups mean EVERY query has a cheap
     # replica in flight; with all mains slowed past the backup's service
     # time, both layers answer every query from the backup pool ("parity")

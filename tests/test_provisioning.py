@@ -1,0 +1,291 @@
+"""The scheme-owned provisioning API (DESIGN.md §14): ``capabilities()``
+dispatch, ``provision_parity`` hooks, and the two training-free schemes —
+fisher (checkpoint merging) and invnet (invertible-coupling encode)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.fisher import FisherScheme, diag_fisher
+from repro.core.invnet import InvNetScheme, init_coupling_params
+from repro.core.parity import ParityTrainContext, train_parity_models
+from repro.core.scheme import (Capabilities, get_scheme, list_schemes,
+                               scheme_capabilities)
+from repro.models.linear import init_linear, linear_fwd
+
+
+def _boom(key):
+    raise AssertionError("training-free provisioning must never "
+                         "initialise a parity model")
+
+
+# ---------------------------------------------------------- capabilities ---
+def test_declared_capabilities_surface():
+    """Every built-in scheme declares its flags through capabilities()."""
+    expected = {
+        "sum": Capabilities(),
+        "concat": Capabilities(),
+        "replication": Capabilities(),
+        "fisher": Capabilities(),
+        "approx_backup": Capabilities(fixes_k=True, approximate=True),
+        "learned": Capabilities(trainable=True),
+        "approxifer": Capabilities(model_agnostic=True, detects_errors=True,
+                                   dynamic_arity=True),
+        "invnet": Capabilities(model_agnostic=True),
+    }
+    assert set(expected) <= set(list_schemes())
+    for name, want in expected.items():
+        got = scheme_capabilities(get_scheme(name, k=2))
+        assert got == want, name
+
+
+def test_legacy_attribute_reads_warn_but_work():
+    """The pre-capabilities() attribute spellings stay readable one release
+    with a DeprecationWarning."""
+    aix = get_scheme("approxifer", k=2)
+    for attr in ("model_agnostic", "detects_errors", "dynamic_arity"):
+        with pytest.warns(DeprecationWarning, match="scheme_capabilities"):
+            assert getattr(aix, attr) is True
+    with pytest.warns(DeprecationWarning, match="scheme_capabilities"):
+        assert get_scheme("learned", k=2).trainable is True
+    with pytest.warns(DeprecationWarning, match="scheme_capabilities"):
+        assert get_scheme("approx_backup", k=2).fixes_k is True
+
+
+def test_attribute_style_scheme_falls_back_with_warning():
+    """A third-party scheme still declaring boolean attributes (no
+    capabilities() method) gets them collected, with a warning."""
+    class Legacy:
+        name, k, r = "legacy", 2, 1
+        model_agnostic = True
+    with pytest.warns(DeprecationWarning, match="capabilities"):
+        caps = scheme_capabilities(Legacy())
+    assert caps == Capabilities(model_agnostic=True)
+
+
+def test_flagless_scheme_defaults_silently():
+    class Bare:
+        name, k, r = "bare", 2, 1
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert scheme_capabilities(Bare()) == Capabilities()
+
+
+# -------------------------------------------------------------- provision ---
+def test_provision_context_caches_deployed_outputs():
+    x = np.random.default_rng(0).normal(size=(16, 6)).astype(np.float32)
+    p = init_linear(jax.random.PRNGKey(0), 6, 3)
+    calls = []
+
+    def counting_fwd(pp, xx):
+        calls.append(1)
+        return linear_fwd(pp, xx)
+
+    ctx = ParityTrainContext(fwd=counting_fwd, init_fn=None, x_train=x)
+    a = ctx.deployed_outputs(p)
+    b = ctx.deployed_outputs(p)
+    assert a is b and len(calls) == 1
+
+
+def test_model_agnostic_provisioning_returns_deployed_refs():
+    """approxifer and invnet never train: r references to the deployed
+    params, init_fn untouched."""
+    x = np.random.default_rng(0).normal(size=(32, 6)).astype(np.float32)
+    W = init_linear(jax.random.PRNGKey(0), 6, 3)
+    for name in ("approxifer", "invnet"):
+        pp, scheme = train_parity_models(
+            W, linear_fwd, _boom, x, k=2, r=2, scheme=name)
+        assert scheme.name == name and len(pp) == 2
+        assert all(p is W for p in pp), name
+
+
+# ------------------------------------------------------------------ fisher ---
+def test_fisher_coeffs_are_row_stochastic():
+    for k, r in ((2, 1), (3, 2), (4, 3)):
+        C = np.asarray(get_scheme("fisher", k=k, r=r).coeffs)
+        assert C.shape == (r, k)
+        assert (C > 0).all()
+        np.testing.assert_allclose(C.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_diag_fisher_matches_explicit_per_example_grads():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 5)).astype(np.float32)
+    p = init_linear(jax.random.PRNGKey(1), 5, 4)
+    fish = diag_fisher(linear_fwd, p, x)
+
+    def nll(pp, xi):
+        logits = linear_fwd(pp, xi[None])[0]
+        return -jax.nn.log_softmax(logits)[int(np.argmax(logits))]
+
+    grads = [jax.grad(lambda q: nll(q, jnp.asarray(xi)))(p) for xi in x]
+    manual = jax.tree.map(
+        lambda *gs: np.mean([np.square(np.asarray(g)) for g in gs], axis=0),
+        *grads)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), b, atol=1e-5),
+        fish, manual)
+
+
+def test_weighted_merge_scalar_weights_is_convex_combination():
+    rng = np.random.default_rng(0)
+    a = {"w": rng.normal(size=(4, 3)).astype(np.float32)}
+    b = {"w": rng.normal(size=(4, 3)).astype(np.float32)}
+    merged = ckpt_io.weighted_merge(
+        [a, b], [{"w": np.float32(3.0)}, {"w": np.float32(1.0)}])
+    np.testing.assert_allclose(np.asarray(merged["w"]),
+                               0.75 * a["w"] + 0.25 * b["w"], atol=1e-5)
+
+
+def test_fisher_provisioning_is_training_free_and_matches_manual_merge():
+    """provision_parity merges the member checkpoints leaf-wise by
+    c_ji * (F_i + floor) without a single gradient step or parity-model
+    init."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(48, 6)).astype(np.float32)
+    m0 = init_linear(jax.random.PRNGKey(1), 6, 3)
+    m1 = init_linear(jax.random.PRNGKey(2), 6, 3)
+    pp, scheme = train_parity_models(
+        [m0, m1], linear_fwd, _boom, x, k=2, r=2, scheme="fisher")
+    assert isinstance(scheme, FisherScheme) and len(pp) == 2
+    C = np.asarray(scheme.coeffs, np.float64)
+    floor = scheme.fisher_floor
+    f0 = jax.tree.map(np.asarray, diag_fisher(linear_fwd, m0,
+                                              x[:scheme.calib_n]))
+    f1 = jax.tree.map(np.asarray, diag_fisher(linear_fwd, m1,
+                                              x[:scheme.calib_n]))
+    for j in range(2):
+        w0, w1 = C[j, 0] * (f0["w"] + floor), C[j, 1] * (f1["w"] + floor)
+        manual = (w0 * np.asarray(m0["w"]) + w1 * np.asarray(m1["w"])) / \
+            (w0 + w1 + 1e-12)
+        np.testing.assert_allclose(np.asarray(pp[j]["w"]), manual,
+                                   atol=1e-5, err_msg=f"row {j}")
+
+
+def test_fisher_identical_members_merge_to_deployed_params():
+    """One checkpoint deployed across all members (the serving default):
+    every merged parity model equals the deployed params."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 6)).astype(np.float32)
+    W = init_linear(jax.random.PRNGKey(0), 6, 3)
+    pp, _ = train_parity_models(W, linear_fwd, _boom, x, k=3, r=2,
+                                scheme="fisher")
+    for p in pp:
+        np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(W["w"]),
+                                   atol=1e-5)
+
+
+def test_fisher_merged_params_roundtrip_through_checkpoint_io(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 6)).astype(np.float32)
+    m0 = init_linear(jax.random.PRNGKey(1), 6, 3)
+    m1 = init_linear(jax.random.PRNGKey(2), 6, 3)
+    pp, _ = train_parity_models([m0, m1], linear_fwd, _boom, x, k=2, r=1,
+                                scheme="fisher")
+    path = os.path.join(tmp_path, "fisher_parity.npz")
+    ckpt_io.save(path, pp[0], step=0, extra={"scheme": "fisher"})
+    loaded, meta = ckpt_io.load(path, like=m0)
+    assert meta["extra"]["scheme"] == "fisher"
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        loaded, pp[0])
+
+
+def test_fisher_rejects_wrong_member_count():
+    x = np.zeros((8, 6), np.float32)
+    m = init_linear(jax.random.PRNGKey(0), 6, 3)
+    with pytest.raises(ValueError, match="per member"):
+        train_parity_models([m, m, m], linear_fwd, _boom, x, k=2,
+                            scheme="fisher")
+
+
+# ------------------------------------------------------------------ invnet ---
+def test_invnet_g_roundtrips_for_odd_and_even_features():
+    for f in (6, 7, 16):
+        iv = InvNetScheme(k=2, r=1)
+        x = np.random.default_rng(f).normal(size=(5, f)).astype(np.float32)
+        y = iv.g_forward(x)
+        back = np.asarray(iv.g_inverse(y))
+        assert not np.allclose(np.asarray(y), x)   # g is not the identity
+        np.testing.assert_allclose(back, x, atol=1e-5)
+
+
+def test_invnet_decode_bit_exact_on_integer_substrate():
+    """Acceptance: invnet decode is BIT-exact on its invertible substrate.
+    Integer coupling params, queries and head weights keep every fp32 op
+    exact (all values far below 2**24), so reconstruction must be
+    np.array_equal — not merely allclose."""
+    coupling = [{"w1": jnp.asarray([2.0, -1.0]),
+                 "b1": jnp.asarray([1.0, 3.0]),
+                 "w2": jnp.asarray([[1.0], [2.0]])},
+                {"w1": jnp.asarray([-1.0, 1.0]),
+                 "b1": jnp.asarray([0.0, 2.0]),
+                 "w2": jnp.asarray([[2.0], [1.0]])}]
+    iv = InvNetScheme(k=2, r=1, coupling_params=coupling)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-4, 5, size=(2, 3, 8)).astype(np.float32)   # [k, B, F]
+    W = rng.integers(-3, 4, size=(8, 4)).astype(np.float32)
+
+    def F(q):                                   # substrate: factors through g
+        return np.asarray(iv.g_forward(q)) @ W
+
+    parity = np.asarray(iv.encode(x))                            # [1, B, 8]
+    g_back = np.asarray(iv.g_inverse(iv.g_forward(x[0])))
+    assert np.array_equal(g_back, x[0])         # inversion itself bit-exact
+    outs = np.stack([F(x[0]), F(x[1])])                          # [k, B, V]
+    p_out = F(parity[0])
+    # r=1 Vandermonde row is all-ones: F(p) == F(x0) + F(x1) exactly
+    assert np.array_equal(p_out, outs[0] + outs[1])
+    for j in range(2):
+        rec = np.asarray(iv.decode_one(jnp.asarray(p_out), jnp.asarray(outs),
+                                       j))
+        assert np.array_equal(rec, outs[j]), f"member {j}"
+
+
+def test_invnet_pallas_backend_matches_jnp():
+    params = init_coupling_params(hidden=8, seed=3)
+    a = InvNetScheme(k=2, r=2, backend="jnp", coupling_params=params)
+    b = InvNetScheme(k=2, r=2, backend="pallas", coupling_params=params)
+    x = np.random.default_rng(1).normal(size=(2, 4, 16)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(a.encode(x)),
+                               np.asarray(b.encode(x)), atol=1e-4)
+
+
+def test_invnet_encode_is_not_fused():
+    """The overridden (non-linear) encode must route fused_parity_outputs to
+    the exact unfused fallback, with no serving-layer special case."""
+    from repro.core import parity as parity_mod
+    iv = get_scheme("invnet", k=2, r=1)
+    W = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, 3)).astype(np.float32))}
+
+    def fwd(p, q):
+        return iv.g_forward(q) @ p["w"]
+
+    x = np.random.default_rng(1).normal(size=(2, 4, 8)).astype(np.float32)
+    out = np.asarray(parity_mod.fused_parity_outputs(iv, x, [W], fwd))
+    manual = np.asarray(fwd(W, iv.encode(x)[0]))[None]
+    np.testing.assert_allclose(out, manual, atol=1e-5)
+    old = parity_mod._FORCE_FUSED
+    try:
+        parity_mod._FORCE_FUSED = True
+        with pytest.raises(ValueError, match="not fusable"):
+            parity_mod.fused_parity_outputs(iv, x, [W], fwd)
+    finally:
+        parity_mod._FORCE_FUSED = old
+
+
+def test_invnet_with_params_swaps_couplings():
+    base = get_scheme("invnet", k=2, r=1)
+    other = init_coupling_params(hidden=8, seed=99)
+    swapped = base.with_params(other)
+    x = np.random.default_rng(2).normal(size=(3, 10)).astype(np.float32)
+    assert not np.allclose(np.asarray(base.g_forward(x)),
+                           np.asarray(swapped.g_forward(x)))
+    np.testing.assert_allclose(
+        np.asarray(swapped.g_inverse(swapped.g_forward(x))), x, atol=1e-5)

@@ -21,13 +21,14 @@ def test_scheme_registry_round_trips():
     with the shape contract [k, ...] -> [r, ...].  A ``fixes_k`` scheme
     (approx_backup) owns its group size: the caller's k is the redundancy
     budget and is NOT imposed on the scheme."""
+    from repro.core.scheme import scheme_capabilities
     assert {"sum", "concat", "replication", "approx_backup",
-            "learned"} <= set(available_schemes())
+            "learned", "fisher", "invnet"} <= set(available_schemes())
     for name in available_schemes():
         s = get_scheme(name, k=4)
         assert isinstance(s, CodingScheme), name
         assert s.name == name
-        if getattr(s, "fixes_k", False):
+        if scheme_capabilities(s).fixes_k:
             assert s.k == 1, name            # approx_backup: k=1 groups
         else:
             assert s.k == 4, name
@@ -315,18 +316,18 @@ def test_frontend_r2_straggling_parity_instance():
         fe.shutdown()
 
 
-def test_train_parity_models_encoder_kind_shim():
-    """encoder_kind= still works but warns toward scheme=."""
+def test_train_parity_models_encoder_kind_removed():
+    """The PR-1-era encoder_kind= alias is removed: TypeError pointing at
+    scheme=."""
     from repro.core.parity import train_parity_models
     from repro.models.linear import init_linear, linear_fwd
     import jax
     x = np.random.default_rng(0).normal(size=(64, 6)).astype(np.float32)
     p = init_linear(jax.random.PRNGKey(0), 6, 3)
-    with pytest.warns(DeprecationWarning, match="scheme="):
-        pp, scheme = train_parity_models(
+    with pytest.raises(TypeError, match="scheme="):
+        train_parity_models(
             p, linear_fwd, lambda key: init_linear(key, 6, 3), x, k=2,
             encoder_kind="sum", epochs=1)
-    assert scheme.name == "sum" and len(pp) == 1
 
 
 # -------------------------------------- replication scheme, end-to-end -----

@@ -196,18 +196,19 @@ def test_frontend_rejects_mismatched_scheme_k():
                      scheme=get_scheme("sum", k=2))
 
 
-def test_threaded_mode_kwarg_is_deprecated_alias():
-    """mode= still works (shim) but warns toward strategy=."""
+def test_threaded_mode_kwarg_removed():
+    """The PR-1-era mode= alias is removed: TypeError pointing at
+    strategy=."""
     W = jnp.ones((4, 3), jnp.float32)
-    with pytest.warns(DeprecationWarning, match="strategy="):
-        fe = ParMFrontend(_linear_fwd, W, k=2, m=2, mode="equal_resources")
-    try:
-        assert fe.strategy.name == "equal_resources"
-        qs = [fe.submit(i, np.ones((1, 4), np.float32)) for i in range(2)]
-        assert fe.wait_all(timeout=10)
-        assert all(q.completed_by == "model" for q in qs)
-    finally:
-        fe.shutdown()
+    with pytest.raises(TypeError, match="strategy="):
+        ParMFrontend(_linear_fwd, W, k=2, m=2, mode="equal_resources")
+
+
+def test_threaded_backup_params_kwarg_removed():
+    """The removed dedicated-backup-pool spelling names its migration."""
+    W = jnp.ones((4, 3), jnp.float32)
+    with pytest.raises(TypeError, match="parity_params="):
+        ParMFrontend(_linear_fwd, W, k=2, m=2, backup_params=W)
 
 
 def test_threaded_replication_strategy_completes():
